@@ -1,0 +1,24 @@
+"""Fig 11: ablation — FedLoRA vs FedSVD (structure only) vs FedARA-r4/r8
+(structure + dynamic rank allocation)."""
+
+from __future__ import annotations
+
+from benchmarks import common as C
+
+
+def main(quick: bool = False):
+    rows = []
+    runs = [("fedlora", "fedlora", 8), ("fedsvd", "fedsvd", 8),
+            ("fedara_r8", "fedara", 8), ("fedara_r4", "fedara", 4)]
+    if quick:
+        runs = runs[:2]
+    for label, method, rank in runs:
+        h = C.run(method, ds="syn20news", dist="dir0.1", rank=rank)
+        rows.append(C.row(f"fig11/{label}", f"{h['final_acc']:.4f}",
+                          comm_mb=round(h["comm_gb"] * 1e3, 2), rank=rank))
+    C.emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Table II: arbitration strategies — FedARA (local masks arbitrated on the
+server) vs FedARA-global (masks generated from the aggregated model)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks import common as C
+from repro.core import arbitration as ARB
+from repro.core import importance as IMP
+from repro.core.fedara import FedARA
+
+
+@dataclasses.dataclass
+class FedARAGlobal(FedARA):
+    """Ablation (Table II): the server ignores client votes and generates the
+    global mask from the aggregated model's own importance scores."""
+    name: str = "fedara_global"
+    last_aggregate: object = None
+
+    def arbitrate(self, rnd, local_masks, prev_global):
+        if self.last_aggregate is None:
+            return prev_global
+        scores, _ = IMP.score_tree(
+            self.last_aggregate.get("adapters", {}), None, self.importance,
+            n_experts=self.n_experts)
+        n_units = sum(
+            int(v.size) for v in _leaves(scores))
+        b = self.budget(rnd, n_units)
+        return ARB.arbitrate_global(scores, b, prev_global)
+
+
+def _leaves(tree):
+    import numpy as np
+    if isinstance(tree, dict):
+        for v in tree.values():
+            yield from _leaves(v)
+    else:
+        yield np.asarray(tree)
+
+
+def main(quick: bool = False):
+    rows = []
+    for name, strat in [("fedara", C.make_strategy("fedara", C.ROUNDS)),
+                        ("fedara_global", None)]:
+        if strat is None:
+            strat = FedARAGlobal(total_rounds=C.ROUNDS)
+            strat.warmup_rounds = max(1, C.ROUNDS // 10)
+            strat.final_rounds_frac = 0.5
+        h = C.run("fedara", ds="syn20news", dist="dir0.1", strategy=strat)
+        rows.append(C.row(f"tab2/{name}", f"{h['final_acc']:.4f}",
+                          comm_mb=round(h["comm_gb"] * 1e3, 2)))
+        if quick:
+            break
+    C.emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

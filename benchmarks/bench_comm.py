@@ -1,0 +1,38 @@
+"""Figs 8 & 12: per-round communication overhead — FedLoRA/FedSVD flat,
+FedARA decaying to the target-rank plateau (~71% per-round reduction)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+
+
+def main(quick: bool = False):
+    rows = []
+    rounds = 6 if quick else max(C.ROUNDS, 16)
+    per_round = {}
+    for method in ["fedlora", "fedsvd", "fedara"]:
+        h = C.run(method, ds="syn20news", dist="dir0.1", rounds=rounds)
+        pr = [(l.down_bytes + l.up_bytes) / 1e6 for l in h["rounds"]]
+        per_round[method] = pr
+        rows.append(C.row(
+            f"fig12/{method}/round0_mb", f"{pr[0]:.3f}",
+            final_mb=f"{pr[-1]:.3f}",
+            reduction_pct=f"{100 * (1 - pr[-1] / pr[0]):.1f}",
+            total_mb=f"{sum(pr):.2f}"))
+        if quick:
+            break
+    if not quick and "fedara" in per_round and "fedlora" in per_round:
+        tot_ara = sum(per_round["fedara"])
+        tot_lora = sum(per_round["fedlora"])
+        rows.append(C.row("fig8/comm_efficiency_x",
+                          f"{tot_lora / tot_ara:.2f}",
+                          fedara_total_mb=f"{tot_ara:.2f}",
+                          fedlora_total_mb=f"{tot_lora:.2f}"))
+    C.emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

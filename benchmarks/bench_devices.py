@@ -1,0 +1,69 @@
+"""Figs 2a/2d/10/17: edge-device total-time and energy models (paper's
+measured per-batch profiles + 1 MB/s link), driven by our byte-exact comm
+logs and the measured module-pruning compute scale."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.federated import devices as DEV
+
+
+def _sim(method: str, rounds: int):
+    h = C.run(method, ds="syn20news", dist="dir0.1", rounds=rounds)
+    fc, logs = h["fc"], h["rounds"]
+    per_client_batches = fc.max_local_batches
+    out = {}
+    for dev in DEV.PROFILES:
+        per_round = []
+        for l in logs:
+            k = max(fc.clients_per_round, 1)
+            scale = 1.0
+            if method == "fedara" and l.live_ranks:
+                # rank-based module pruning shrinks the adapter share of the
+                # local step (measured in bench_module_pruning ≈ 12%)
+                frac = l.live_ranks / max(logs[0].live_ranks, 1)
+                scale = 1.0 - 0.12 * (1 - frac)
+            per_round.append(DEV.round_cost(
+                dev, "distilbert", per_client_batches,
+                l.down_bytes // k, l.up_bytes // k, scale))
+        out[dev] = per_round
+    return out, h
+
+
+def main(quick: bool = False):
+    rows = []
+    rounds = 6 if quick else C.ROUNDS
+    methods = ["fedlora", "fedara"] if quick else \
+        ["fedlora", "ffa_lora", "fedara"]
+    sims = {}
+    for m in methods:
+        sims[m], _ = _sim(m, rounds)
+    for dev in DEV.PROFILES:
+        for m in methods:
+            per_round = sims[m][dev]
+            total = DEV.total_time(dev, "distilbert", per_round)
+            comm_frac = sum(r.comm_s for r in per_round) / max(total, 1e-9)
+            rows.append(C.row(f"fig10/{dev}/{m}/total_s", f"{total:.1f}",
+                              comm_frac=f"{comm_frac:.2f}"))
+        base = DEV.total_time(dev, "distilbert", sims[methods[0]][dev])
+        ours = DEV.total_time(dev, "distilbert", sims["fedara"][dev])
+        rows.append(C.row(f"fig10/{dev}/fedara_reduction_pct",
+                          f"{100 * (1 - ours / base):.1f}"))
+    # Fig 2d: communication-to-computation ratio per device (FedLoRA)
+    for dev in DEV.PROFILES:
+        pr = sims[methods[0]][dev]
+        ratio = sum(r.comm_s for r in pr) / max(sum(r.compute_s for r in pr),
+                                                1e-9)
+        rows.append(C.row(f"fig2d/{dev}/comm_over_comp", f"{ratio:.2f}"))
+    # Fig 17: energy on Orin Nano
+    for m in methods:
+        e = DEV.energy_j("orin_nano", sims[m]["orin_nano"])
+        rows.append(C.row(f"fig17/orin_nano/{m}/energy_j", f"{e:.0f}"))
+    C.emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Fig 5: magnitude (Eq. 11) and directional (Eq. 12) discrepancies between
+global and local ΔW under FedLoRA vs FedSVD (truncated-SVD adaptation)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro import optim as OPT
+from repro.core import adapters as AD
+from repro.data.synthetic import Dataset, batches
+from repro.federated import client as CL
+from repro.federated.server import fedavg
+from repro.models import Model
+
+
+def _module_deltas(trainable, cfg):
+    """Flattened ΔW over all adapter modules (f32)."""
+    out = []
+
+    def walk(t):
+        if isinstance(t, dict) and "A" in t and "B" in t:
+            scaling = cfg.adapter_alpha / cfg.adapter_rank
+            out.append(np.asarray(
+                AD.delta_w(t, None, scaling)).reshape(-1))
+            return
+        if isinstance(t, dict):
+            for v in t.values():
+                walk(v)
+
+    walk(trainable.get("adapters", {}))
+    return np.concatenate(out) if out else np.zeros(1)
+
+
+def mag_dir(global_tr, local_trs, cfg):
+    g = _module_deltas(global_tr, cfg)
+    mags, dirs = [], []
+    for lt in local_trs:
+        l = _module_deltas(lt, cfg)
+        mags.append(np.linalg.norm(g - l))
+        denom = np.linalg.norm(g) * np.linalg.norm(l)
+        dirs.append(float(g @ l / denom) if denom > 0 else 0.0)
+    return float(np.sum(mags)), float(np.mean(dirs))
+
+
+def run_drift(peft: str, rounds: int, seed: int = 0):
+    cfg = C.model_cfg(20)
+    train, _ = C.dataset("syn20news")
+    parts = C.partitions(train, "dir0.1", seed)
+    model = Model(cfg, peft=peft, unroll=True)
+    base, trainable = model.init(jax.random.key(seed))
+    masks = model.init_masks()
+    opt = OPT.adam(3e-3)
+    step = CL.make_train_step(model, opt, "cls")
+    rng = np.random.default_rng(seed)
+    series = []
+    for rnd in range(rounds):
+        sel = rng.choice(len(parts), 4, replace=False)
+        locals_ = []
+        for cid in sel:
+            idx = parts[cid]
+            cd = Dataset(train.tokens[idx], train.labels[idx])
+            gen = list(batches(cd, 16, np.random.default_rng(cid)))[:4]
+            params_k, _, _ = CL.local_train(step, base, trainable, masks,
+                                            None, opt, gen)
+            locals_.append(params_k)
+        new_global = fedavg(locals_, [1.0] * len(locals_))
+        series.append(mag_dir(new_global, locals_, cfg))
+        trainable = new_global
+    return series
+
+
+def main(quick: bool = False):
+    rows = []
+    rounds = 4 if quick else min(C.ROUNDS, 12)
+    for peft, label in [(AD.LORA, "fedlora"), (AD.BEA, "fedsvd")]:
+        series = run_drift(peft, rounds)
+        mag = np.mean([m for m, _ in series[1:]])
+        dirr = np.mean([d for _, d in series[1:]])
+        rows.append(C.row(f"fig5/{label}/magnitude", f"{mag:.4f}",
+                          rounds=rounds))
+        rows.append(C.row(f"fig5/{label}/direction", f"{dirr:.4f}",
+                          rounds=rounds))
+    C.emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Fig 9: final adaptive rank allocation — surviving ranks per (layer,
+component) after federated fine-tuning (deeper layers / f1-f2 retain more,
+average rank ≈ target)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+
+
+def _walk(masks, path=""):
+    if isinstance(masks, dict):
+        for k, v in masks.items():
+            yield from _walk(v, f"{path}.{k}" if path else k)
+    else:
+        yield path, np.asarray(masks)
+
+
+def main(quick: bool = False):
+    rounds = 6 if quick else max(C.ROUNDS, 16)
+    h = C.run("fedara", ds="syn20news", dist="dir0.1", rounds=rounds)
+    masks = h["masks"]
+    rows = []
+    total = live = 0
+    for path, m in sorted(_walk(masks)):
+        r = int(m.sum())
+        total += m.size
+        live += r
+        short = path.replace("dec.tail.", "").replace("adapters.", "")
+        rows.append(C.row(f"fig9/{short}", r, of=m.size))
+    rows.append(C.row("fig9/avg_rank_frac", f"{live / max(total, 1):.3f}",
+                      target=C.make_strategy("fedara", rounds).target_rank_frac))
+    C.emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

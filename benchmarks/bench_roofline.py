@@ -1,0 +1,42 @@
+"""§Roofline table: reads the dry-run sweep output (results/dryrun_all.json)
+and prints the three-term roofline per (arch × shape × mesh)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import common as C
+
+RESULTS = os.environ.get("DRYRUN_JSON", "results/dryrun_all.json")
+
+
+def main(quick: bool = False):
+    rows = []
+    if not os.path.exists(RESULTS):
+        rows.append(C.row("roofline/missing", RESULTS,
+                          hint="run repro.launch.dryrun --all --both-meshes"))
+        C.emit(rows)
+        return rows
+    with open(RESULTS) as f:
+        records = json.load(f)
+    for rec in records:
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec.get("status") != "ok":
+            rows.append(C.row(name, "skip" if "skip" in str(rec.get("status"))
+                              else "FAIL", why=str(rec.get("status"))[:60]))
+            continue
+        r = rec["roofline"]
+        rows.append(C.row(
+            name, f"{max(r['compute_s'], r['memory_s'], r['collective_s']):.3e}",
+            compute_s=f"{r['compute_s']:.3e}",
+            memory_s=f"{r['memory_s']:.3e}",
+            collective_s=f"{r['collective_s']:.3e}",
+            dominant=r["dominant"],
+            useful_frac=f"{r['useful_frac']:.2f}"))
+    C.emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

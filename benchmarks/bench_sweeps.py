@@ -1,0 +1,31 @@
+"""Fig 15: sensitivity to the target average rank (T_r) and arbitration
+threshold (T_h) — validation performance vs communication overhead."""
+
+from __future__ import annotations
+
+from benchmarks import common as C
+
+
+def main(quick: bool = False):
+    rows = []
+    rounds = 6 if quick else max(10, C.ROUNDS // 2)
+    fracs = [0.25] if quick else [0.125, 0.25, 0.5]
+    ths = [] if quick else [0.3, 0.5, 0.7]
+    for frac in fracs:
+        strat = C.make_strategy("fedara", rounds)
+        strat.target_rank_frac = frac
+        h = C.run("fedara", rounds=rounds, strategy=strat)
+        rows.append(C.row(f"fig15/target_frac_{frac}", f"{h['final_acc']:.4f}",
+                          comm_mb=round(h["comm_gb"] * 1e3, 2)))
+    for th in ths:
+        strat = C.make_strategy("fedara", rounds)
+        strat.threshold = th
+        h = C.run("fedara", rounds=rounds, strategy=strat)
+        rows.append(C.row(f"fig15/threshold_{th}", f"{h['final_acc']:.4f}",
+                          comm_mb=round(h["comm_gb"] * 1e3, 2)))
+    C.emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Eqs 9/10: drift-variance scaling — σ²_BA = Θ(r²) vs σ²_BEA = Θ(r) under
+cross-rank covariance (the paper's theoretical justification for BEA)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+
+
+def _sim(r, d=64, k=200, rho=0.6, seed=0):
+    """Separable-covariance model of Eq. 7 (shared component → cross-rank
+    covariance ρ); E‖ΔW‖² estimated over k draws."""
+    rng = np.random.default_rng(seed)
+
+    def correlated(n):
+        z = rng.normal(size=(k, 1, d))
+        g = rng.normal(size=(k, n, d))
+        return np.sqrt(rho) * z + np.sqrt(1 - rho) * g
+
+    b = correlated(r)
+    a = correlated(r)
+    e = rng.normal(size=(k, r))
+    dw_ba = np.einsum("kri,krj->kij", b, a)
+    dw_bea = np.einsum("kr,kri,krj->kij", e, b, a)
+    return (np.mean(np.sum(dw_ba ** 2, axis=(1, 2))),
+            np.mean(np.sum(dw_bea ** 2, axis=(1, 2))))
+
+
+def main(quick: bool = False):
+    ranks = [2, 4, 8] if quick else [2, 4, 8, 16, 32]
+    ba, bea = zip(*[_sim(r, d=64, k=100 if quick else 300) for r in ranks])
+    slope_ba = np.polyfit(np.log(ranks), np.log(ba), 1)[0]
+    slope_bea = np.polyfit(np.log(ranks), np.log(bea), 1)[0]
+    rows = [
+        C.row("eq9/loglog_slope_BA", f"{slope_ba:.2f}", expect="~2 (Theta(r^2))"),
+        C.row("eq10/loglog_slope_BEA", f"{slope_bea:.2f}", expect="~1 (Theta(r))"),
+    ]
+    for r, vba, vbea in zip(ranks, ba, bea):
+        rows.append(C.row(f"fig_var/r{r}", f"{vba:.1f}",
+                          bea=f"{vbea:.1f}", ratio=f"{vba / vbea:.1f}"))
+    C.emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Shared benchmark harness: standard federated emulation setup (the paper's
+laptop-GPU emulation, scaled to this container's CPU with a width-reduced
+DistilBERT-family model) + CSV row helpers.
+
+Environment knobs:
+  BENCH_ROUNDS   federated rounds per run (default 20; CI smoke uses 4-6)
+  BENCH_QUICK=1  shrink everything for a fast pass
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+from repro.configs.distilbert import MINI
+from repro.data.synthetic import make_classification
+from repro.federated.baselines import all_strategies
+from repro.federated.partition import (dirichlet_partition, iid_partition,
+                                       pathological_partition)
+from repro.federated.server import FedConfig, run_federated
+from repro.models import Model
+
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+ROUNDS = int(os.environ.get("BENCH_ROUNDS", "6" if QUICK else "20"))
+
+# two synthetic classification "datasets" (analogues of 20News / News
+# Category): different class counts, sizes and task seeds
+DATASETS = {
+    "syn20news": dict(n_classes=20, n_train=1200, n_test=300, task_seed=11),
+    "synnewscat": dict(n_classes=15, n_train=1500, n_test=300, task_seed=23),
+}
+
+N_CLIENTS = 20
+SEQ = 32
+
+
+def model_cfg(n_classes: int, rank: int = 12):
+    return MINI.with_(n_layers=2, layer_pattern=("attn",) * 2,
+                      n_classes=n_classes, adapter_rank=rank)
+
+
+def dataset(name: str):
+    d = DATASETS[name]
+    cfg = model_cfg(d["n_classes"])
+    train = make_classification(d["n_train"], d["n_classes"], cfg.vocab_size,
+                                SEQ, seed=1, task_seed=d["task_seed"])
+    test = make_classification(d["n_test"], d["n_classes"], cfg.vocab_size,
+                               SEQ, seed=2, task_seed=d["task_seed"])
+    return train, test
+
+
+def partitions(train, dist: str = "dir0.1", seed: int = 0):
+    if dist == "iid":
+        return iid_partition(train.labels, N_CLIENTS, seed)
+    if dist == "pathological":
+        return pathological_partition(train.labels, N_CLIENTS, 2, seed)
+    alpha = float(dist.replace("dir", ""))
+    return dirichlet_partition(train.labels, N_CLIENTS, alpha, seed)
+
+
+def fed_config(rounds: int | None = None, **kw) -> FedConfig:
+    base = dict(rounds=rounds or ROUNDS, clients_per_round=4, batch_size=16,
+                max_local_batches=4, lr=3e-3, eval_every=4, eval_batches=12)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def make_strategy(name: str, rounds: int):
+    s = all_strategies(rounds=rounds)[name]
+    if hasattr(s, "total_rounds"):
+        s.total_rounds = rounds
+        s.warmup_rounds = max(1, rounds // 10)
+        s.final_rounds_frac = 0.5
+    return s
+
+
+def run(name: str, ds: str = "syn20news", dist: str = "dir0.1",
+        rounds: int | None = None, rank: int | None = None, seed: int = 0,
+        strategy=None, fc: FedConfig | None = None):
+    rounds = rounds or ROUNDS
+    d = DATASETS[ds]
+    strat = strategy or make_strategy(name, rounds)
+    r = rank if rank is not None else strat.init_rank(model_cfg(1))
+    cfg = model_cfg(d["n_classes"], rank=r)
+    train, test = dataset(ds)
+    parts = partitions(train, dist, seed)
+    model = Model(cfg, peft=strat.peft, unroll=True)
+    fc = fc or fed_config(rounds=rounds, seed=seed)
+    t0 = time.time()
+    h = run_federated(model, strat, parts, train, test, fc)
+    h["wall_s"] = time.time() - t0
+    h["strategy"] = strat
+    h["fc"] = fc
+    return h
+
+
+def row(name: str, value, **derived) -> str:
+    dv = ";".join(f"{k}={v}" for k, v in derived.items())
+    return f"{name},{value},{dv}"
+
+
+def emit(rows):
+    for r in rows:
+        print(r, flush=True)

@@ -1,0 +1,22 @@
+"""LM fine-tuning across architecture families with the BEA adapters:
+a few dozen steps on a synthetic Markov stream; the loss must fall.
+
+  PYTHONPATH=src python examples/lm_finetune.py [--arch kimi_k2_1t_a32b]
+(smoke-sized configs; pass --steps for longer runs)
+"""
+
+import argparse
+
+from repro.launch import train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default=None)
+ap.add_argument("--steps", type=int, default=30)
+args = ap.parse_args()
+
+archs = [args.arch] if args.arch else ["qwen2_0p5b", "granite_moe_1b_a400m",
+                                       "mamba2_780m"]
+for arch in archs:
+    print(f"=== {arch} (smoke config) ===")
+    train.main(["--arch", arch, "--smoke", "--steps", str(args.steps),
+                "--batch", "4", "--seq", "64"])

@@ -1,0 +1,13 @@
+"""Batched serving with a PEFT-adapted model: prefill a batch of prompts,
+decode greedily, across three different architecture families (dense GQA,
+sliding-window, SSM).
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+from repro.launch import serve
+
+for arch in ["qwen2_0p5b", "gemma3_1b", "mamba2_780m"]:
+    print(f"=== {arch} ===")
+    serve.main(["--arch", arch, "--smoke", "--batch", "4",
+                "--prompt-len", "24", "--gen", "8"])

@@ -1,0 +1,13 @@
+"""repro — FedARA (Adaptive Rank Allocation for Federated PEFT) as a
+production-grade multi-pod JAX framework.
+
+Public API:
+  repro.configs.get_config(arch, smoke=...)   — architecture registry
+  repro.models.Model                          — unified LM (all families)
+  repro.core                                  — the paper's mechanisms
+  repro.federated                             — FL runtime + baselines
+  repro.launch                                — mesh/dryrun/train/serve CLIs
+  repro.kernels                               — Pallas TPU kernels + oracles
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+from repro.checkpoint.ckpt import load_pytree, restore_run, save_pytree, save_run  # noqa

@@ -1,0 +1,62 @@
+"""NPZ-based pytree checkpointing (orbax is not installed in this container).
+
+Trees are flattened with stable path keys; dtypes/shapes round-trip exactly.
+``save_run``/``restore_run`` persist a federated run's state: trainable tree,
+global rank masks, round counter and RNG seed — enough to resume Algorithm 1
+mid-schedule.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.pytree import flatten_with_paths
+
+_SEP = "|"
+
+
+def save_pytree(tree: Any, path: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = flatten_with_paths(jax.tree.map(np.asarray, tree))
+    np.savez(path, **{_SEP + p: v for p, v in flat})
+
+
+def load_pytree(path: str) -> Any:
+    with np.load(path, allow_pickle=False) as data:
+        out: dict = {}
+        for key in data.files:
+            assert key.startswith(_SEP), key
+            parts = key[len(_SEP):].split(".")
+            node = out
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = data[key]
+    return _intify(out)
+
+
+def _intify(tree):
+    """Restore list-like levels (keys '0','1',...) as dicts — callers index
+    by the same string keys the saver produced, so plain dicts suffice."""
+    return tree
+
+
+def save_run(path: str, *, trainable, masks, rnd: int, seed: int,
+             extra: dict | None = None) -> None:
+    save_pytree({"trainable": trainable,
+                 "masks": masks if masks is not None else {}}, path + ".npz")
+    meta = {"round": rnd, "seed": seed, **(extra or {})}
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+
+
+def restore_run(path: str):
+    state = load_pytree(path + ".npz")
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    masks = state.get("masks") or None
+    return state["trainable"], masks, meta

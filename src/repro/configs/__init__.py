@@ -1,0 +1,45 @@
+"""Config registry: ``--arch <id>`` resolution for every assigned
+architecture (full + reduced smoke variant) plus the paper's own models."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape  # noqa
+
+ARCH_IDS = [
+    "internvl2_1b",
+    "zamba2_1p2b",
+    "kimi_k2_1t_a32b",
+    "gemma2_2b",
+    "gemma3_1b",
+    "seamless_m4t_large_v2",
+    "minicpm_2b",
+    "qwen2_0p5b",
+    "mamba2_780m",
+    "granite_moe_1b_a400m",
+]
+PAPER_IDS = ["distilbert", "bert", "bart"]
+
+_ALIASES = {
+    "internvl2-1b": "internvl2_1b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "gemma2-2b": "gemma2_2b",
+    "gemma3-1b": "gemma3_1b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "minicpm-2b": "minicpm_2b",
+    "qwen2-0.5b": "qwen2_0p5b",
+    "mamba2-780m": "mamba2_780m",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+}
+
+
+def get_config(arch: str, smoke: bool = False) -> ArchConfig:
+    mod_name = _ALIASES.get(arch, arch.replace("-", "_").replace(".", "p"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)

@@ -1,0 +1,5 @@
+"""FedARA core: the paper's contribution as composable pieces."""
+
+from repro.core import adapters, arbitration, comm, importance, masks  # noqa
+from repro.core import pruning, schedule  # noqa: F401
+from repro.core.fedara import FedARA, FedSVD, Strategy  # noqa: F401

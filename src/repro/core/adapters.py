@@ -1,0 +1,120 @@
+"""PEFT adapter structures: the paper's truncated-SVD (BEA) adaptation plus
+every baseline it compares against.
+
+The paper (§IV-A) replaces LoRA's ``ΔW = (α/r)·B·A`` with
+
+    ΔW = (α/r) · B · E · A        (Eq. 2)
+
+where ``E ∈ R^{r×r}`` is diagonal, ``A, B`` are Gaussian (symmetric init) and
+``E = 0`` so ΔW = 0 at init.  Rank masking multiplies the diagonal — a masked
+rank contributes nothing and receives no gradient, which is exactly the
+CommPru semantics (§IV-B3).
+
+Adapters live in a *separate* pytree from the frozen base; each adapted linear
+at path ``blocks.<i>.<name>`` has a leaf dict here with matching path.
+Per-expert adapters carry a leading expert axis and shard with the experts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.pytree import ParamMeta
+
+# Adapter kinds -------------------------------------------------------------
+BEA = "bea"            # the paper: B·E·A truncated-SVD adaptation
+LORA = "lora"          # FedLoRA baseline: B·A, B zero-init
+FFA = "ffa"            # FFA-LoRA: B·A with A frozen (handled by optimizer mask)
+NONE = "none"
+
+
+def adapter_meta(kind: str, d_in: int, d_out: int, rank: int,
+                 n_experts: int = 0, dtype=jnp.float32,
+                 orthogonal_a: bool = False) -> dict | None:
+    """Meta tree for one adapted linear.  ``n_experts>0`` → per-expert."""
+    if kind == NONE or rank <= 0:
+        return None
+    lead = (n_experts,) if n_experts else ()
+    lead_ax = ("experts",) if n_experts else ()
+    # A: (r, d_in) Gaussian; B: (d_out, r).
+    a_init = "uniform" if orthogonal_a else "scaled_normal"
+    meta = {
+        "A": ParamMeta(lead + (rank, d_in), dtype, lead_ax + ("rank", None),
+                       init=a_init, scale=1.0 / (d_in ** 0.5)),
+        "B": ParamMeta(lead + (d_out, rank), dtype, lead_ax + (None, "rank"),
+                       init="zeros" if kind in (LORA, FFA) else "scaled_normal",
+                       scale=1.0 / (d_out ** 0.5)),
+    }
+    if kind == BEA:
+        # Symmetric init: A, B Gaussian; the diagonal E starts at zero.
+        meta["E"] = ParamMeta(lead + (rank,), dtype, lead_ax + ("rank",),
+                              init="zeros")
+    return meta
+
+
+def apply_adapter(y: jax.Array, x: jax.Array, ad: dict | None,
+                  mask: jax.Array | None, scaling: float) -> jax.Array:
+    """``y + (α/r)·((x Aᵀ) ⊙ (e⊙m)) Bᵀ`` (BEA) or the LoRA analogue.
+
+    x: (..., d_in), y: (..., d_out).  Per-expert adapters have leading expert
+    dims on A/B/E and x/y of shape (E, ..., d).
+    """
+    if ad is None:
+        return y
+    a, b = ad["A"], ad["B"]
+    cd = y.dtype
+    if a.ndim == 2:                                   # plain linear
+        u = jnp.einsum("...i,ri->...r", x, a.astype(cd))
+    else:                                             # per-expert (E, r, d_in)
+        u = jnp.einsum("e...i,eri->e...r", x, a.astype(cd))
+    if "E" in ad:
+        e = ad["E"]
+        em = (e if mask is None else e * mask.astype(e.dtype)).astype(cd)
+        if em.ndim >= 2:                              # per-expert (E, r)
+            em = em.reshape(em.shape[:-1] + (1,) * (u.ndim - em.ndim) +
+                            em.shape[-1:])
+        u = u * em
+    elif mask is not None:
+        u = u * mask.astype(cd)
+    if b.ndim == 2:
+        dy = jnp.einsum("...r,or->...o", u, b.astype(cd))
+    else:                                             # (E, d_out, r)
+        dy = jnp.einsum("e...r,eor->e...o", u, b.astype(cd))
+    return y + scaling * dy
+
+
+def delta_w(ad: dict, mask: jax.Array | None, scaling: float) -> jax.Array:
+    """Materialize ΔW (d_out, d_in) — used by drift diagnostics (Fig. 5)."""
+    a, b = ad["A"].astype(jnp.float32), ad["B"].astype(jnp.float32)
+    if "E" in ad:
+        e = ad["E"].astype(jnp.float32)
+        if mask is not None:
+            e = e * mask.astype(jnp.float32)
+        return scaling * jnp.einsum("or,r,ri->oi", b, e, a)
+    if mask is not None:
+        a = a * mask.astype(jnp.float32)[:, None]
+    return scaling * (b @ a)
+
+
+def rank_of(ad: dict) -> int:
+    return ad["A"].shape[-2]
+
+
+# Bottleneck adapters (FedAdapter-h / FedAdapter-p baselines) ----------------
+
+def bottleneck_meta(d_model: int, size: int, dtype=jnp.float32) -> dict:
+    """Houlsby/Pfeiffer-style bottleneck adapter: down → gelu → up + skip."""
+    return {
+        "down": ParamMeta((d_model, size), dtype, (None, "rank"),
+                          init="normal"),
+        "up": ParamMeta((size, d_model), dtype, ("rank", None), init="zeros"),
+        "bd": ParamMeta((size,), dtype, ("rank",), init="zeros"),
+        "bu": ParamMeta((d_model,), dtype, (None,), init="zeros"),
+    }
+
+
+def apply_bottleneck(x: jax.Array, ad: dict) -> jax.Array:
+    cd = x.dtype
+    h = jax.nn.gelu(x @ ad["down"].astype(cd) + ad["bd"].astype(cd))
+    return x + h @ ad["up"].astype(cd) + ad["bu"].astype(cd)

@@ -1,0 +1,131 @@
+"""Triplet importance scores (paper Eq. 14, Table I).
+
+For module n, rank i the triplet is (E_i, B[:,i], A[i,:]) and
+
+    I_{n,i} = I(E_i) + mean_j I(B_{j,i}) + mean_j I(A_{i,j})
+
+with four leaf scores:
+    Mag          I(w) = |w|                       (the paper's default)
+    Grad         I(w) = |∂ℓ/∂w|
+    Mixed        I(w) = |w · ∂ℓ/∂w|
+    Sensitivity  AdaLoRA-style EMA of |w·g| (≈1.3× compute, Table I)
+
+Scores are computed host-side per round over the (tiny) adapter tree; per-
+expert adapters average over the expert axis because the rank mask belongs to
+the insertion position (layer, component), not to individual experts.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+MAG, GRAD, MIXED, SENSITIVITY = "mag", "grad", "mixed", "sensitivity"
+
+
+def _np(x) -> np.ndarray:
+    return np.asarray(jax.device_get(x), dtype=np.float32)
+
+
+def _is_module(x) -> bool:
+    return isinstance(x, dict) and "A" in x and "B" in x
+
+
+def _leaf_score(w, g, method: str):
+    if method == MAG:
+        return np.abs(w)
+    if method == GRAD:
+        return np.abs(g)
+    if method in (MIXED, SENSITIVITY):
+        return np.abs(w * g)
+    raise ValueError(method)
+
+
+def _module_score(mod: dict, grads: dict | None, method: str,
+                  n_experts: int) -> np.ndarray:
+    """Returns (lead..., r) float score — per-expert axis averaged away."""
+    a, b = _np(mod["A"]), _np(mod["B"])
+    ga = _np(grads["A"]) if grads else np.zeros_like(a)
+    gb = _np(grads["B"]) if grads else np.zeros_like(b)
+    sa = _leaf_score(a, ga, method).mean(-1)          # (lead..., r)
+    sb = _leaf_score(b, gb, method).mean(-2)          # (lead..., r)
+    score = sa + sb
+    if "E" in mod:
+        e = _np(mod["E"])
+        ge = _np(grads["E"]) if grads else np.zeros_like(e)
+        score = score + _leaf_score(e, ge, method)
+    # average the expert axis into the (layer, component) mask granularity
+    if n_experts and score.ndim >= 2 and score.shape[-2] == n_experts:
+        score = score.mean(-2)
+    return score
+
+
+def score_tree(adapters: Any, grads: Any | None, method: str = MAG,
+               n_experts: int = 0, ema_state: Any | None = None,
+               ema_beta: float = 0.85):
+    """Mask-structured tree of importance scores.
+
+    Returns (scores, new_ema_state).  ``ema_state`` is used only by the
+    Sensitivity method (AdaLoRA's smoothed sensitivity).
+    """
+    new_ema: dict = {}
+
+    def walk(ad, gr, ema, path):
+        if _is_module(ad):
+            s = _module_score(ad, gr, method, n_experts)
+            if method == SENSITIVITY:
+                prev = ema if isinstance(ema, np.ndarray) else np.zeros_like(s)
+                s = ema_beta * prev + (1 - ema_beta) * s
+                new_ema[path] = s
+            return s
+        if isinstance(ad, dict):
+            out = {}
+            for k, v in ad.items():
+                if isinstance(v, dict) and "down" in v:   # bottleneck: no ranks
+                    continue
+                r = walk(v, (gr or {}).get(k) if isinstance(gr, dict) else None,
+                         (ema or {}).get(k) if isinstance(ema, dict) else None,
+                         f"{path}.{k}")
+                if r is not None:
+                    out[k] = r
+            return out or None
+        return None
+
+    scores = walk(adapters, grads, ema_state, "") or {}
+    if method == SENSITIVITY:
+        # rebuild nested ema from scores (same structure)
+        return scores, scores
+    return scores, ema_state
+
+
+def flat_concat(score_tree_: Any) -> tuple[np.ndarray, list[tuple[str, tuple]]]:
+    """Flatten a mask-structured tree → (flat vector, [(path, shape)])."""
+    from repro.pytree import flatten_with_paths
+    items = flatten_with_paths(score_tree_,
+                               is_leaf=lambda x: isinstance(x, np.ndarray))
+    vecs, layout = [], []
+    for path, leaf in items:
+        arr = np.asarray(leaf)
+        vecs.append(arr.reshape(-1))
+        layout.append((path, arr.shape))
+    if not vecs:
+        return np.zeros((0,), np.float32), []
+    return np.concatenate(vecs), layout
+
+
+def unflatten(flat: np.ndarray, layout: list[tuple[str, tuple]]) -> dict:
+    """Inverse of flat_concat (returns nested dict keyed by path parts)."""
+    out: dict = {}
+    off = 0
+    for path, shape in layout:
+        n = int(np.prod(shape)) if shape else 1
+        val = flat[off:off + n].reshape(shape)
+        off += n
+        node = out
+        parts = path.split(".")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return out

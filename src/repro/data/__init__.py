@@ -1,0 +1,2 @@
+from repro.data.synthetic import (  # noqa: F401
+    Dataset, batches, make_classification, make_lm_stream, make_seq2seq)

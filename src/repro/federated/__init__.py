@@ -1,0 +1,1 @@
+from repro.federated.server import FedConfig, run_federated  # noqa: F401

@@ -1,0 +1,242 @@
+"""Every FedPEFT baseline the paper compares against (§V Baselines).
+
+FedLoRA        plain LoRA + FedAvg
+FedAdapter-h   Houlsby bottleneck adapters (attention + FFN)
+FedAdapter-p   Pfeiffer bottleneck adapters (FFN only)
+SLoRA          stage 1 sparse full-FT → SVD init of LoRA → stage 2 FedLoRA
+FeDeRA         LoRA initialized from the SVD of the pre-trained weights
+FFA-LoRA       B-only training (A frozen); -dr: doubled rank, orthogonal A
+FedSVD         paper's ablation: BEA without dynamic rank allocation
+FedARA         the paper (core/fedara.py)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adapters as AD
+from repro.core.fedara import FedARA, FedSVD, Strategy
+
+
+def _tree_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+@dataclasses.dataclass
+class FedLoRA(Strategy):
+    name: str = "fedlora"
+    peft: str = AD.LORA
+
+
+@dataclasses.dataclass
+class FedAdapterH(Strategy):
+    name: str = "fedadapter_h"
+    peft: str = "adapter_h"
+
+
+@dataclasses.dataclass
+class FedAdapterP(Strategy):
+    name: str = "fedadapter_p"
+    peft: str = "adapter_p"
+
+
+def _iter_adapter_modules(tree, path=""):
+    if isinstance(tree, dict) and "A" in tree and "B" in tree:
+        yield path, tree
+        return
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _iter_adapter_modules(v, f"{path}.{k}" if path else k)
+
+
+def _map_modules(tree, fn, path=""):
+    if isinstance(tree, dict) and "A" in tree and "B" in tree:
+        return fn(path, tree)
+    if isinstance(tree, dict):
+        return {k: _map_modules(v, fn, f"{path}.{k}" if path else k)
+                for k, v in tree.items()}
+    return tree
+
+
+@dataclasses.dataclass
+class FFALoRA(Strategy):
+    """Freeze A, train B only [Sun et al. ICLR'24]; halves the upload."""
+    name: str = "ffa_lora"
+    peft: str = AD.LORA
+    double_rank: bool = False       # the -dr variant
+    orthogonal_a: bool = False
+
+    def init_rank(self, cfg) -> int:
+        return cfg.adapter_rank * (2 if self.double_rank else 1)
+
+    def post_init(self, model, base, trainable, key):
+        if self.orthogonal_a:
+            def ortho(path, mod):
+                a = np.asarray(jax.device_get(mod["A"]), np.float32)
+                flat = a.reshape(-1, a.shape[-1])
+                q, _ = np.linalg.qr(flat.T)            # (d_in, r·lead)
+                a2 = q.T.reshape(a.shape) / np.sqrt(a.shape[-1]) * \
+                    np.sqrt(flat.shape[1])
+                return dict(mod, A=jnp.asarray(a2, mod["A"].dtype))
+            trainable = dict(trainable, adapters=_map_modules(
+                trainable["adapters"], ortho))
+        return base, trainable
+
+    def optimizer_gate(self, trainable, masks):
+        def gate(path, mod):
+            return {k: (jnp.zeros((), jnp.float32) if k == "A"
+                        else jnp.ones((), jnp.float32)) for k in mod}
+        g = _map_modules(trainable["adapters"], gate)
+        out = {"adapters": g}
+        if "head" in trainable:
+            out["head"] = jax.tree.map(lambda _: jnp.ones((), jnp.float32),
+                                       trainable["head"])
+        return out
+
+    def comm_down(self, trainable, masks) -> int:
+        # A is frozen and derivable from the shared seed: transmit B only.
+        b_params = sum(int(np.prod(m["B"].shape))
+                       for _, m in _iter_adapter_modules(trainable["adapters"]))
+        return b_params * self.dtype_bytes + self._head_bytes(trainable)
+
+    def comm_up(self, trainable, masks) -> int:
+        return self.comm_down(trainable, masks)
+
+
+@dataclasses.dataclass
+class FeDeRA(Strategy):
+    """Init LoRA from the truncated SVD of W_pre; base keeps the residual."""
+    name: str = "federa"
+    peft: str = AD.LORA
+
+    def post_init(self, model, base, trainable, key):
+        new_base = jax.tree.map(lambda x: x, base)      # shallow copy tree
+
+        def reinit(path, mod):
+            w = _find_base_weight(new_base, path)
+            if w is None or w.ndim != 2:
+                return mod
+            r = mod["A"].shape[-2]
+            wf = np.asarray(jax.device_get(w), np.float32)  # (d_in, d_out)
+            u, s, vt = np.linalg.svd(wf, full_matrices=False)
+            sr = np.sqrt(s[:r])
+            a = (u[:, :r] * sr).T                           # (r, d_in)
+            b = (vt[:r].T * sr)                             # (d_out, r)
+            scaling = model.cfg.adapter_alpha / max(r, 1)
+            _set_base_weight(new_base, path,
+                             jnp.asarray(wf - scaling * (u[:, :r] * s[:r]) @ vt[:r],
+                                         w.dtype))
+            return dict(mod, A=jnp.asarray(a, mod["A"].dtype),
+                        B=jnp.asarray(b, mod["B"].dtype))
+
+        adapters = _map_modules(trainable["adapters"], reinit)
+        return new_base, dict(trainable, adapters=adapters)
+
+
+@dataclasses.dataclass
+class SLoRA(Strategy):
+    """Two-stage [Babakniya et al. 2023]: sparse full-FT warmup, then the SVD
+    of the accumulated base delta initializes LoRA (stage 1 = 10% of rounds,
+    paper §V).  The server runs stage-1 clients as full-FT with a fixed
+    sparse update gate; comm counts density·|base| values per direction."""
+    name: str = "slora"
+    peft: str = AD.LORA
+    sparse_density: float = 0.05
+    stage1_frac: float = 0.1
+
+    def stage1_rounds(self, total_rounds: int) -> int:
+        return max(1, int(total_rounds * self.stage1_frac))
+
+    def sparse_gate(self, base, seed: int = 0):
+        key = jax.random.key(seed)
+
+        def leaf(path, x):
+            if x.dtype not in (jnp.float32, jnp.bfloat16, jnp.float16):
+                return jnp.zeros((), jnp.float32)
+            k = jax.random.fold_in(key, abs(hash(path)) % (1 << 31))
+            return (jax.random.uniform(k, x.shape)
+                    < self.sparse_density).astype(jnp.float32)
+
+        from repro.pytree import path_of
+        return jax.tree_util.tree_map_with_path(
+            lambda p, x: leaf(path_of(p), x), base)
+
+    def stage1_comm_bytes(self, base) -> int:
+        n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(base))
+        return int(n * self.sparse_density) * self.dtype_bytes
+
+    def svd_init_from_delta(self, model, base0, base1, trainable):
+        """ΔW = base1 − base0 → per-module truncated SVD → LoRA init."""
+        def reinit(path, mod):
+            w0 = _find_base_weight(base0, path)
+            w1 = _find_base_weight(base1, path)
+            if w0 is None or w0.ndim != 2:
+                return mod
+            r = mod["A"].shape[-2]
+            delta = np.asarray(jax.device_get(w1), np.float32) - \
+                np.asarray(jax.device_get(w0), np.float32)
+            u, s, vt = np.linalg.svd(delta, full_matrices=False)
+            sr = np.sqrt(np.maximum(s[:r], 1e-12))
+            scaling = model.cfg.adapter_alpha / max(r, 1)
+            a = (u[:, :r] * sr).T / np.sqrt(scaling)
+            b = (vt[:r].T * sr) / np.sqrt(scaling)
+            return dict(mod, A=jnp.asarray(a, mod["A"].dtype),
+                        B=jnp.asarray(b, mod["B"].dtype))
+
+        return dict(trainable, adapters=_map_modules(
+            trainable["adapters"], reinit))
+
+
+# ---- helpers to navigate base weights for FeDeRA/SLoRA ---------------------
+
+_ATTN_FUSED = {"wq", "wk", "wv", "wo"}
+
+
+def _find_base_weight(base, adapter_path: str):
+    """Map an adapter path (e.g. dec.body.p0.attn.wq) to the base weight.
+    Attention weights are stored 3D (d, H, hd) → viewed 2D; stacked (scan)
+    modules are skipped (FeDeRA/SLoRA benchmarks use unrolled models)."""
+    node = base
+    parts = adapter_path.split(".")
+    for p in parts:
+        if not isinstance(node, dict) or p not in node:
+            return None
+        node = node[p]
+    if isinstance(node, dict) and "w" in node:
+        w = node["w"]
+        if w.ndim == 3 and parts[-1] in _ATTN_FUSED:
+            if parts[-1] == "wo":
+                return jnp.reshape(w, (-1, w.shape[-1]))
+            return jnp.reshape(w, (w.shape[0], -1))
+        return w
+    return None
+
+
+def _set_base_weight(base, adapter_path: str, value):
+    node = base
+    parts = adapter_path.split(".")
+    for p in parts[:-1]:
+        node = node[p]
+    leaf = node[parts[-1]]
+    w = leaf["w"]
+    leaf["w"] = jnp.reshape(value.astype(w.dtype), w.shape)
+
+
+def all_strategies(rounds: int = 100) -> dict[str, Strategy]:
+    return {
+        "fedlora": FedLoRA(),
+        "fedadapter_h": FedAdapterH(),
+        "fedadapter_p": FedAdapterP(),
+        "slora": SLoRA(),
+        "federa": FeDeRA(),
+        "ffa_lora": FFALoRA(),
+        "ffa_lora_dr": FFALoRA(name="ffa_lora_dr", double_rank=True,
+                               orthogonal_a=True),
+        "fedsvd": FedSVD(),
+        "fedara": FedARA(total_rounds=rounds),
+    }

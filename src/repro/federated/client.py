@@ -1,0 +1,93 @@
+"""Client-side local training.  One jitted step is compiled per (model,
+strategy-structure) and shared across all clients — the emulation pattern the
+paper uses on a single GPU, here on whatever jax.devices() offers."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim as OPT
+
+
+def make_train_step(model, opt: OPT.Optimizer, task: str = "cls",
+                    train_base: bool = False):
+    loss_fn = model.cls_loss if task == "cls" else model.lm_loss
+
+    @jax.jit
+    def step(base, params, opt_state, masks, gate, batch):
+        if train_base:
+            def f(both):
+                return loss_fn(both["base"], both["trainable"], masks, batch,
+                               remat=False)
+            both = {"base": base, "trainable": params}
+            (_, (loss, metric)), grads = jax.value_and_grad(
+                f, has_aux=True)(both)
+            g = grads["trainable"]
+            gb = grads["base"]
+        else:
+            def f(tr):
+                return loss_fn(base, tr, masks, batch, remat=False)
+            (_, (loss, metric)), g = jax.value_and_grad(
+                f, has_aux=True)(params)
+            gb = None
+        updates, opt_state = opt.update(g, opt_state, params)
+        if gate is not None:
+            updates = jax.tree.map(
+                lambda u, gt: u * jnp.asarray(gt, u.dtype), updates, gate)
+        params = jax.tree.map(lambda p, u: (p + u.astype(p.dtype)),
+                              params, updates)
+        return params, opt_state, g, gb, loss, metric
+
+    return step
+
+
+def make_base_update_step(opt: OPT.Optimizer):
+    """Sparse full-FT update of the base (SLoRA stage 1)."""
+    @jax.jit
+    def step(base, opt_state, grads, gate):
+        updates, opt_state = opt.update(grads, opt_state, base)
+        if gate is not None:
+            updates = jax.tree.map(
+                lambda u, gt: u * jnp.asarray(gt, u.dtype), updates, gate)
+        base = jax.tree.map(lambda p, u: p + u.astype(p.dtype), base, updates)
+        return base, opt_state
+    return step
+
+
+def make_eval_step(model, task: str = "cls"):
+    @jax.jit
+    def step(base, params, masks, batch):
+        logits, _, _ = model.forward(base, params, masks, batch,
+                                     mode="train", remat=False)
+        if task == "cls":
+            pred = logits.argmax(-1)
+            return (pred == batch["labels"]).astype(jnp.float32).sum()
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        nll = -jnp.take_along_axis(logp, batch["targets"][..., None],
+                                   -1)[..., 0]
+        return nll.mean()
+    return step
+
+
+def local_train(step_fn, base, trainable, masks, gate, opt, data_batches
+                ) -> tuple[Any, Any, dict]:
+    """Run local epochs.  Returns (trainable', last_grads, metrics)."""
+    opt_state = opt.init(trainable)
+    params = trainable
+    losses, metrics = [], []
+    grads = None
+    for batch in data_batches:
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, grads, _, loss, metric = step_fn(
+            base, params, opt_state, masks, gate, jb)
+        losses.append(float(loss))
+        metrics.append(float(metric))
+    return params, grads, {
+        "loss": float(np.mean(losses)) if losses else float("nan"),
+        "metric": float(np.mean(metrics)) if metrics else float("nan"),
+        "n_batches": len(losses)}

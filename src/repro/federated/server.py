@@ -1,0 +1,207 @@
+"""Federated server loop (paper Algorithm 1), strategy-agnostic.
+
+Implements: client selection → CommPru'd broadcast → parallel local training
+(emulated sequentially, shared jit) → FedAvg aggregation → FedArb mask
+arbitration → RankDet module gating — with byte-exact communication
+accounting per round.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim as OPT
+from repro.core import comm as COMM
+from repro.core import masks as MK
+from repro.core import pruning as PR
+from repro.data.synthetic import Dataset, batches
+from repro.federated import client as CL
+
+
+@dataclasses.dataclass
+class FedConfig:
+    rounds: int = 30
+    clients_per_round: int = 5
+    local_epochs: int = 1
+    batch_size: int = 8
+    lr: float = 2e-3
+    head_lr: float = 2e-3
+    seed: int = 0
+    task: str = "cls"
+    eval_every: int = 5
+    max_local_batches: int = 8          # caps emulation cost per client
+    eval_batches: int = 16
+
+
+@dataclasses.dataclass
+class RoundLog:
+    rnd: int
+    down_bytes: int
+    up_bytes: int
+    live_ranks: int
+    dead_modules: int
+    trainable_params: int
+    loss: float
+    acc: float = float("nan")
+
+
+def fedavg(trees: list[Any], weights: list[float]) -> Any:
+    w = np.asarray(weights, np.float64)
+    w = (w / w.sum()).astype(np.float32)
+
+    def avg(*leaves):
+        acc = leaves[0].astype(jnp.float32) * w[0]
+        for wi, leaf in zip(w[1:], leaves[1:]):
+            acc = acc + leaf.astype(jnp.float32) * wi
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *trees)
+
+
+def evaluate(model, base, trainable, masks, test: Dataset, fc: FedConfig):
+    ev = CL.make_eval_step(model, fc.task)
+    rng = np.random.default_rng(0)
+    correct, total = 0.0, 0
+    for i, batch in enumerate(batches(test, fc.batch_size, rng)):
+        if i >= fc.eval_batches:
+            break
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        correct += float(ev(base, trainable, masks, jb))
+        total += len(batch["labels"])
+    return correct / max(total, 1)
+
+
+def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
+                  test: Dataset, fc: FedConfig,
+                  on_round: Callable | None = None) -> dict:
+    """Returns history dict with per-round logs and final accuracy."""
+    key = jax.random.key(fc.seed)
+    base, trainable = model.init(key)
+    base, trainable = strategy.post_init(model, base, trainable, key)
+    masks = model.init_masks() if strategy.uses_masks() else None
+    masks_np = MK.jax_to_np(masks) if masks else None
+    n_rank_units = MK.total_ranks(masks_np) if masks_np else 0
+
+    total_steps = fc.rounds * fc.max_local_batches * fc.local_epochs
+    opt = OPT.adam(OPT.linear_decay(fc.lr, total_steps))
+    step_fn = CL.make_train_step(model, opt, fc.task)
+    rng = np.random.default_rng(fc.seed)
+
+    logs: list[RoundLog] = []
+    history = {"rounds": logs, "acc": [], "comm_gb": 0.0}
+    t0 = time.time()
+
+    # SLoRA stage 1: sparse full-FT rounds before LoRA (baselines.SLoRA)
+    s1_rounds = (strategy.stage1_rounds(fc.rounds)
+                 if hasattr(strategy, "stage1_rounds") else 0)
+    if s1_rounds:
+        base0 = base
+        s1_gate = strategy.sparse_gate(base, fc.seed)
+        s1_step = CL.make_train_step(model, opt, fc.task, train_base=True)
+        s1_update = CL.make_base_update_step(opt)
+        for rnd in range(s1_rounds):
+            sel = rng.choice(len(parts), size=min(fc.clients_per_round,
+                                                  len(parts)), replace=False)
+            deltas, sizes = [], []
+            comm = strategy.stage1_comm_bytes(base) * len(sel) * 2
+            for cid in sel:
+                idx = parts[cid]
+                cd = Dataset(train.tokens[idx], train.labels[idx])
+                bk, opt_b = base, opt.init(base)
+                opt_t, params_k = opt.init(trainable), trainable
+                gen = _take(batches(cd, fc.batch_size,
+                                    np.random.default_rng(cid + rnd * 97)),
+                            fc.max_local_batches)
+                for bt in gen:
+                    jb = {k: jnp.asarray(v) for k, v in bt.items()}
+                    params_k, opt_t, _, gb, _, _ = s1_step(
+                        bk, params_k, opt_t, masks, None, jb)
+                    bk, opt_b = s1_update(bk, opt_b, gb, s1_gate)
+                deltas.append(jax.tree.map(lambda a, b: a - b, bk, base))
+                sizes.append(len(idx))
+            davg = fedavg(deltas, sizes)
+            base = jax.tree.map(lambda b, d: b + d, base, davg)
+            logs.append(RoundLog(rnd, comm // 2, comm // 2,
+                                 live_ranks=0, dead_modules=0,
+                                 trainable_params=PR.count_trainable(base),
+                                 loss=float("nan")))
+            history["comm_gb"] += comm / 1e9
+        # convert the sparse delta into the LoRA init, reset the base
+        trainable = strategy.svd_init_from_delta(model, base0, base,
+                                                 trainable)
+        base = base0
+
+    for rnd in range(s1_rounds, fc.rounds):
+        sel = rng.choice(len(parts), size=min(fc.clients_per_round,
+                                              len(parts)), replace=False)
+        # ---- CommPru'd broadcast ----------------------------------------
+        if masks_np is not None:
+            trainable = dict(trainable,
+                             adapters=COMM.prune_tree(trainable["adapters"],
+                                                      masks_np))
+        down = strategy.comm_down(trainable, masks_np) * len(sel)
+        gate = strategy.optimizer_gate(trainable, masks_np)
+
+        results, local_masks, up = [], [], 0
+        for cid in sel:
+            idx = parts[cid]
+            client_data = Dataset(train.tokens[idx], train.labels[idx])
+            gen = batches(client_data, fc.batch_size,
+                          np.random.default_rng(fc.seed * 1000 + rnd * 97 + cid),
+                          epochs=fc.local_epochs)
+            gen = _take(gen, fc.max_local_batches * fc.local_epochs)
+            params_k, grads_k, m = CL.local_train(
+                step_fn, base, trainable, masks, gate, opt, gen)
+            if strategy.uses_masks():
+                lm = strategy.local_masks(rnd, params_k["adapters"],
+                                          (grads_k or {}).get("adapters"),
+                                          n_rank_units)
+                local_masks.append(lm)
+            # upload pruned by the *current* global mask (Alg. 1 line 28)
+            up += strategy.comm_up(params_k, masks_np)
+            results.append((params_k, len(idx), m))
+
+        # ---- FedAvg ------------------------------------------------------
+        trainable = fedavg([r[0] for r in results],
+                           [r[1] for r in results])
+        # ---- FedArb + RankDet ---------------------------------------------
+        if strategy.uses_masks():
+            strategy.last_aggregate = trainable   # FedARA-global ablation hook
+            masks_np = strategy.arbitrate(rnd, local_masks, masks_np)
+            masks = jax.tree.map(jnp.asarray, masks_np)
+            trainable = dict(trainable,
+                             adapters=COMM.prune_tree(trainable["adapters"],
+                                                      masks_np))
+        live = int(MK.count_true(masks_np)) if masks_np else n_rank_units
+        n_dead = (len(PR.dead_modules(masks_np)) if masks_np else 0)
+        tp = PR.count_trainable(trainable)
+        loss = float(np.mean([r[2]["loss"] for r in results]))
+        log = RoundLog(rnd, int(down), int(up), live, dead_modules=n_dead,
+                       trainable_params=tp, loss=loss)
+        if (rnd + 1) % fc.eval_every == 0 or rnd == fc.rounds - 1:
+            log.acc = evaluate(model, base, trainable, masks, test, fc)
+            history["acc"].append((rnd, log.acc))
+        logs.append(log)
+        history["comm_gb"] += (down + up) / 1e9
+        if on_round:
+            on_round(rnd, log)
+
+    history["final_acc"] = logs[-1].acc
+    history["wall_s"] = time.time() - t0
+    history["base"] = base
+    history["trainable"] = trainable
+    history["masks"] = masks_np
+    return history
+
+
+def _take(gen, n):
+    for i, x in enumerate(gen):
+        if i >= n:
+            return
+        yield x

@@ -1,0 +1,2 @@
+from repro.kernels.bea_fused import bea_dense  # noqa: F401
+from repro.kernels.ops import adapted_dense  # noqa: F401

@@ -1,0 +1,43 @@
+"""jit'd dispatch wrappers around the Pallas kernels.
+
+``use_pallas("auto")`` → real Mosaic lowering on TPU, interpret mode on CPU
+(the kernel body executes in Python — correctness validation only).  The
+model layers call ``adapted_dense`` which routes to the fused kernel when
+enabled, otherwise the unfused jnp path (the dry-run default, so the HLO is
+analyzable op-by-op; §Perf swaps the kernel in and accounts the fusion win).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bea_fused import bea_dense
+
+_BACKEND_IS_TPU = None
+
+
+def _on_tpu() -> bool:
+    global _BACKEND_IS_TPU
+    if _BACKEND_IS_TPU is None:
+        _BACKEND_IS_TPU = jax.default_backend() == "tpu"
+    return _BACKEND_IS_TPU
+
+
+def adapted_dense(x, w, a, b, e, mask, scaling: float,
+                  use_kernel: bool = False):
+    """x: (..., K) @ w (K, N) with fused masked-BEA epilogue.
+
+    Leading dims are flattened into M for the kernel.
+    """
+    if not use_kernel:
+        y = jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+        u = jnp.einsum("...k,rk->...r", x, a.astype(x.dtype))
+        u = u * (e * mask.astype(e.dtype)).astype(x.dtype)
+        return y + scaling * jnp.einsum("...r,nr->...n", u, b.astype(x.dtype))
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, x.shape[-1])
+    ym = bea_dense(xm, w, a, b, e, mask, scaling=scaling,
+                   interpret=not _on_tpu())
+    return ym.reshape(lead + (w.shape[1],))

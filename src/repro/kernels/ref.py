@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bea_dense_ref(x, w, a, b, e, mask, scaling: float):
+    """y = x@W + scaling·((x Aᵀ) ⊙ (e⊙mask)) Bᵀ.
+
+    x: (M, K); w: (K, N); a: (r, K); b: (N, r); e, mask: (r,).
+    """
+    y = jnp.einsum("mk,kn->mn", x, w.astype(x.dtype))
+    u = jnp.einsum("mk,rk->mr", x, a.astype(x.dtype))
+    u = u * (e * mask.astype(e.dtype)).astype(x.dtype)
+    return y + scaling * jnp.einsum("mr,nr->mn", u, b.astype(x.dtype))
+
+
+def lora_dense_ref(x, w, a, b, mask, scaling: float):
+    y = jnp.einsum("mk,kn->mn", x, w.astype(x.dtype))
+    u = jnp.einsum("mk,rk->mr", x, a.astype(x.dtype)) * mask.astype(x.dtype)
+    return y + scaling * jnp.einsum("mr,nr->mn", u, b.astype(x.dtype))
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        scale=None):
+    """q/k/v: (B, S, H, hd) MHA (no GQA grouping in the kernel oracle)."""
+    b, s, h, hd = q.shape
+    scale = scale if scale is not None else hd ** -0.5
+    s_ = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if softcap:
+        s_ = softcap * jnp.tanh(s_ / softcap)
+    pos = jnp.arange(s)
+    m = jnp.ones((s, s), bool)
+    if causal:
+        m &= pos[None, :] <= pos[:, None]
+    if window:
+        m &= pos[None, :] > pos[:, None] - window
+    s_ = jnp.where(m[None, None], s_, -2.3819763e38)
+    p = jax.nn.softmax(s_, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)

@@ -1,0 +1,332 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent, and derive
+the roofline terms from compiled artifacts.
+
+For every (architecture × input shape) and mesh — (16,16)=("data","model")
+single-pod, (2,16,16)=("pod","data","model") multi-pod — this:
+
+1. compiles the PRODUCTION program (layer scans, remat) on ShapeDtypeStructs:
+   the pass/fail deliverable; memory_analysis() proves it fits;
+2. compiles two tiny *unrolled* calibration programs (1× and 2× the layer
+   pattern period) whose cost difference is the exact per-period cost —
+   XLA's cost_analysis counts a scan body once, so the full program's
+   FLOPs/bytes/collectives are reconstructed as
+       cost(1×period + tail) + (repeats−1) × [cost(2×period) − cost(1×period)]
+   (encoder-decoder archs get a third program to separate the encoder body);
+3. adds the analytic chunk-scan correction for the flash-attention interiors
+   (launch/analysis.py), validated against full unrolls on small shapes.
+
+The XLA_FLAGS line above MUST precede any jax import (device count locks at
+first init); this file is the only place it is set.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2_0p5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--both-meshes] --out out.json
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim as OPT
+from repro import sharding as SH
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch import analysis as AN
+from repro.launch import specs as SP
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.models import Ctx, Model
+from repro.pytree import abstractify, tree_bytes
+
+
+def eligible(cfg, shape) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "skip: full-attention arch at 500k (DESIGN.md)"
+    return True, ""
+
+
+def long_decode_rules(mesh):
+    """long_500k: batch=1 is unshardable — shard the KV cache sequence."""
+    base = dict(SH.rules_for(mesh))
+    seq_axes = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+    base.update(batch=None, kv_seq=seq_axes, kv_heads=None)
+    return base
+
+
+def build_dryrun(arch: str, shape_name: str, multi_pod: bool,
+                 rules_override=None, peft: str = "bea", cfg=None,
+                 unroll: bool = False, tuned: bool = False):
+    """Returns (lowered, info) ready to compile.
+
+    ``tuned=True`` applies the divisibility-aware layout planner
+    (launch/layout.py, the productized §Perf result); default is the
+    paper-faithful baseline layout."""
+    from repro.launch.layout import choose_rules
+    cfg = cfg or get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = choose_rules(cfg, shape, mesh, tuned=tuned)
+    if rules_override:
+        rules.update(rules_override)
+    ctx = Ctx(mesh=mesh, rules=rules)
+    model = Model(cfg, peft=peft, unroll=unroll)
+
+    base_meta = model.base_meta()
+    tr_meta = model.trainable_meta()
+    base_abs, tr_abs = abstractify(base_meta), abstractify(tr_meta)
+    base_sh = SH.sharding_tree(base_meta, mesh, rules)
+    tr_sh = SH.sharding_tree(tr_meta, mesh, rules)
+    masks_abs = ST.mask_abstract(model)
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    masks_sh = jax.tree.map(lambda _: rep, masks_abs)
+
+    info = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "n_chips": 512 if multi_pod else 256,
+            "base_param_bytes": tree_bytes(base_meta),
+            "trainable_params": sum(
+                m.size for m in jax.tree.leaves(
+                    tr_meta, is_leaf=lambda x: hasattr(x, "axes")))}
+
+    if shape.kind == "train":
+        batch_abs = SP.batch_specs(cfg, shape)
+        batch_sh = ST.batch_shardings(batch_abs, SP.batch_logical_axes(cfg),
+                                      mesh, rules)
+        opt = OPT.adam(1e-3)
+        opt_abs = ST.abstract_opt_state(opt, tr_abs)
+        opt_sh = ST.sharding_like(opt_abs, tr_sh, mesh)
+        step = ST.make_train_step(model, opt, ctx, task="lm")
+        jitted = jax.jit(step, in_shardings=(base_sh, tr_sh, opt_sh,
+                                             masks_sh, batch_sh),
+                         donate_argnums=(1, 2))
+        lowered = jitted.lower(base_abs, tr_abs, opt_abs, masks_abs, batch_abs)
+    elif shape.kind == "prefill":
+        batch_abs, cache_meta = SP.prefill_specs(cfg, shape, model)
+        cache_abs = abstractify(cache_meta)
+        cache_sh = SH.sharding_tree(cache_meta, mesh, rules)
+        batch_sh = ST.batch_shardings(batch_abs, SP.batch_logical_axes(cfg),
+                                      mesh, rules)
+        step = ST.make_prefill_step(model, ctx)
+        jitted = jax.jit(step, in_shardings=(base_sh, tr_sh, masks_sh,
+                                             batch_sh, cache_sh),
+                         donate_argnums=(4,))
+        lowered = jitted.lower(base_abs, tr_abs, masks_abs, batch_abs,
+                               cache_abs)
+    else:                                                 # decode
+        token_abs, cache_meta = SP.decode_specs(cfg, shape, model)
+        cache_abs = abstractify(cache_meta)
+        cache_sh = SH.sharding_tree(cache_meta, mesh, rules)
+        token_sh = ST.batch_shardings(token_abs, {"tokens": ("batch", None)},
+                                      mesh, rules)
+        step = ST.make_decode_step(model, ctx)
+        jitted = jax.jit(step, in_shardings=(base_sh, tr_sh, masks_sh,
+                                             token_sh, cache_sh),
+                         donate_argnums=(4,))
+        lowered = jitted.lower(base_abs, tr_abs, masks_abs, token_abs,
+                               cache_abs)
+    return lowered, info
+
+
+# ---------------------------------------------------------------------------
+# Calibration: per-period costs from tiny unrolled programs
+# ---------------------------------------------------------------------------
+
+def _variant_cfg(cfg, dec_periods: int, enc_layers: int):
+    """Shrink the layer pattern to k×period (+tail); keep everything else."""
+    model = Model(cfg)
+    plan = model.plan
+    if plan.repeats:
+        pat = tuple(plan.period) * dec_periods + tuple(plan.tail)
+    else:
+        pat = tuple(plan.tail)
+    pat = tuple("attn" if k == "dec" else k for k in pat)
+    kw = dict(layer_pattern=pat, n_layers=len(pat))
+    if cfg.is_encoder_decoder:
+        kw["n_encoder_layers"] = enc_layers
+    return cfg.with_(**kw)
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes_: float = 0.0
+    wire: dict = dataclasses.field(default_factory=dict)
+    counts: dict = dataclasses.field(default_factory=dict)
+
+    def sub(self, o):
+        return Costs(self.flops - o.flops, self.bytes_ - o.bytes_,
+                     {k: self.wire.get(k, 0) - o.wire.get(k, 0)
+                      for k in set(self.wire) | set(o.wire)},
+                     {k: self.counts.get(k, 0) - o.counts.get(k, 0)
+                      for k in set(self.counts) | set(o.counts)})
+
+    def addmul(self, o, r: float):
+        return Costs(self.flops + r * o.flops, self.bytes_ + r * o.bytes_,
+                     {k: self.wire.get(k, 0) + r * o.wire.get(k, 0)
+                      for k in set(self.wire) | set(o.wire)},
+                     {k: self.counts.get(k, 0) + int(r * o.counts.get(k, 0))
+                      for k in set(self.counts) | set(o.counts)})
+
+
+def _measure(arch, shape_name, multi_pod, cfg, unroll, rules_override=None,
+             tuned: bool = False):
+    lowered, _ = build_dryrun(arch, shape_name, multi_pod, rules_override,
+                              cfg=cfg, unroll=unroll, tuned=tuned)
+    compiled = lowered.compile()
+    fl, by = AN.cost_terms(compiled, 0)
+    coll = AN.parse_collectives(compiled.as_text())
+    return Costs(fl, by, dict(coll.wire_bytes), dict(coll.counts)), compiled
+
+
+def calibrated_costs(arch, shape_name, multi_pod, rules_override=None,
+                     tuned: bool = False):
+    """Reconstructed full-program Costs (per chip) via period calibration."""
+    cfg = get_config(arch)
+    model = Model(cfg)
+    r_dec = model.plan.repeats
+    r_enc = model.enc_plan.repeats if model.enc_plan else 0
+
+    c1, _ = _measure(arch, shape_name, multi_pod,
+                     _variant_cfg(cfg, 1, 1 if r_enc else 0), True,
+                     rules_override, tuned)
+    total = c1
+    if r_dec >= 2:
+        c2, _ = _measure(arch, shape_name, multi_pod,
+                         _variant_cfg(cfg, 2, 1 if r_enc else 0), True,
+                         rules_override, tuned)
+        total = total.addmul(_clamp0(c2.sub(c1)), r_dec - 1)
+    if r_enc >= 2:
+        c2e, _ = _measure(arch, shape_name, multi_pod,
+                          _variant_cfg(cfg, 1, 2), True, rules_override,
+                          tuned)
+        total = total.addmul(_clamp0(c2e.sub(c1)), r_enc - 1)
+    return total
+
+
+def _clamp0(c: "Costs") -> "Costs":
+    """Per-period diffs can dip negative when XLA restructures the larger
+    calibration program (e.g. CSE of zamba2's shared-attn weight gathers);
+    a period can never have negative cost — clamp at zero."""
+    return Costs(max(c.flops, 0.0), max(c.bytes_, 0.0),
+                 {k: max(v, 0) for k, v in c.wire.items()},
+                 {k: max(v, 0) for k, v in c.counts.items()})
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+            rules_override=None, skip_calibration: bool = False,
+            tuned: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = eligible(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        rec["status"] = why
+        if verbose:
+            print(f"[dryrun] {arch} × {shape_name}: {why}", flush=True)
+        return rec
+    t0 = time.time()
+    try:
+        # 1. the production program (scanned, remat) — pass/fail + memory
+        lowered, info = build_dryrun(arch, shape_name, multi_pod,
+                                     rules_override, unroll=False,
+                                     tuned=tuned)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        # 2. calibrated whole-program costs (per chip)
+        if skip_calibration:
+            fl, by = AN.cost_terms(compiled, 0)
+            coll = AN.parse_collectives(compiled.as_text())
+            costs = Costs(fl, by, dict(coll.wire_bytes), dict(coll.counts))
+        else:
+            costs = calibrated_costs(arch, shape_name, multi_pod,
+                                     rules_override, tuned=tuned)
+        # 3. analytic chunk-scan correction (global) → add per-chip share
+        fl_add, by_add = AN.scan_interior_correction(cfg, shape)
+        n = info["n_chips"]
+        roof = AN.Roofline(
+            arch=arch, shape=shape_name, mesh=rec["mesh"], n_chips=n,
+            hlo_flops=costs.flops * n + fl_add,
+            hlo_bytes=costs.bytes_ * n + by_add,
+            wire_bytes_per_chip=sum(costs.wire.values()),
+            model_flops=AN.model_flops(cfg, shape)).finalize()
+        rec.update(
+            status="ok", lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1), total_s=round(time.time() - t0, 1),
+            base_param_bytes=info["base_param_bytes"],
+            trainable_params=info["trainable_params"],
+            collective_counts=costs.counts,
+            collective_wire_bytes={k: int(v) for k, v in costs.wire.items()},
+            roofline=roof.row(),
+        )
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                rec[attr] = int(v)
+        if verbose:
+            r = rec["roofline"]
+            print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: OK "
+                  f"({rec['total_s']:.0f}s) "
+                  f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+                  f"collective={r['collective_s']:.3e}s → {r['dominant']}",
+                  flush=True)
+    except Exception as e:  # noqa: BLE001 — report as dry-run failure
+        rec["status"] = f"FAIL: {type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()
+        if verbose:
+            print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: "
+                  f"{rec['status']}", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + ["all"])
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + ["all"])
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="all archs × shapes")
+    ap.add_argument("--skip-calibration", action="store_true",
+                    help="production compile only (no roofline calibration)")
+    ap.add_argument("--tuned", action="store_true",
+                    help="divisibility-aware layout planner (launch/layout.py)")
+    ap.add_argument("--out", default=None, help="write JSON records")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if (args.all or args.arch in (None, "all")) \
+        else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape in (None, "all")) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+
+    records = []
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                records.append(run_one(
+                    arch, shp, mp, skip_calibration=args.skip_calibration,
+                    tuned=args.tuned))
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(records, f, indent=1, default=str)
+    n_fail = sum(1 for r in records
+                 if str(r.get("status", "")).startswith("FAIL"))
+    print(f"[dryrun] {len(records)} combos, {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,78 @@
+"""ShapeDtypeStruct input stand-ins for every (architecture × input shape) —
+weak-type-correct, shardable, zero allocation (the dry-run pattern)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """Abstract batch for a train/prefill step."""
+    b, s = shape.global_batch, shape.seq_len
+    out: dict = {}
+    if cfg.is_encoder_decoder:
+        dec_len = max(s // 4, 8)
+        if cfg.modality == "audio":
+            out["frames"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+        else:
+            out["enc_tokens"] = SDS((b, s), jnp.int32)
+        out["tokens"] = SDS((b, dec_len), jnp.int32)
+        out["targets"] = SDS((b, dec_len), jnp.int32)
+        return out
+    if cfg.modality == "vision":
+        p = cfg.n_prefix_embeds
+        out["prefix_embeds"] = SDS((b, p, cfg.d_model), jnp.bfloat16)
+        out["tokens"] = SDS((b, s - p), jnp.int32)
+        out["targets"] = SDS((b, s - p), jnp.int32)
+        return out
+    out["tokens"] = SDS((b, s), jnp.int32)
+    out["targets"] = SDS((b, s), jnp.int32)
+    return out
+
+
+def batch_logical_axes(cfg: ArchConfig) -> dict:
+    axes = {"tokens": ("batch", None), "targets": ("batch", None)}
+    if cfg.is_encoder_decoder:
+        if cfg.modality == "audio":
+            axes["frames"] = ("batch", None, None)
+        else:
+            axes["enc_tokens"] = ("batch", None)
+    if cfg.modality == "vision":
+        axes["prefix_embeds"] = ("batch", None, None)
+    return axes
+
+
+def decode_specs(cfg: ArchConfig, shape: InputShape, model) -> tuple[dict, dict]:
+    """(token_spec, cache_meta) for a decode step."""
+    b, s = shape.global_batch, shape.seq_len
+    src_len = max(s // 4, 8) if cfg.is_encoder_decoder else 0
+    cache_meta = model.cache_meta(b, s, src_len=src_len)
+    token = {"tokens": SDS((b, 1), jnp.int32)}
+    return token, cache_meta
+
+
+def prefill_specs(cfg: ArchConfig, shape: InputShape, model) -> tuple[dict, dict]:
+    b, s = shape.global_batch, shape.seq_len
+    out: dict = {}
+    if cfg.is_encoder_decoder:
+        dec_len = max(s // 4, 8)
+        if cfg.modality == "audio":
+            out["frames"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+        else:
+            out["enc_tokens"] = SDS((b, s), jnp.int32)
+        out["tokens"] = SDS((b, dec_len), jnp.int32)
+        cache_meta = model.cache_meta(b, dec_len, src_len=s)
+    else:
+        if cfg.modality == "vision":
+            p = cfg.n_prefix_embeds
+            out["prefix_embeds"] = SDS((b, p, cfg.d_model), jnp.bfloat16)
+            out["tokens"] = SDS((b, s - p), jnp.int32)
+        else:
+            out["tokens"] = SDS((b, s), jnp.int32)
+        cache_meta = model.cache_meta(b, s)
+    return out, cache_meta

@@ -1,0 +1,1 @@
+from repro.models.lm import Ctx, Model  # noqa: F401

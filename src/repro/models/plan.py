@@ -1,0 +1,52 @@
+"""Layer-pattern planner.
+
+Architectures repeat block patterns (kimi: 61×moe; gemma3: (5×local, global)×4
++ 2×local; zamba2: (5×mamba, shared_attn)×6 + 2×mamba).  We detect the
+smallest period that tiles the pattern and `lax.scan` over the repeats with
+param stacks, keeping compile time and HBM bounded; a non-periodic tail is
+unrolled.  ``shared_attn`` blocks (zamba2) close over one shared param set and
+are excluded from stacking.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.pytree import ParamMeta
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    period: tuple[str, ...]     # block kinds inside the scanned body
+    repeats: int                # number of scan iterations (0 → no scan)
+    tail: tuple[str, ...]       # unrolled trailing blocks
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.period) * self.repeats + len(self.tail)
+
+
+def build_plan(pattern: tuple[str, ...]) -> Plan:
+    n = len(pattern)
+    for p in range(1, n + 1):
+        repeats = n // p
+        if repeats < 2:
+            break
+        period = pattern[:p]
+        if all(pattern[i] == period[i % p] for i in range(repeats * p)) \
+                and pattern[repeats * p:] == period[:n - repeats * p]:
+            return Plan(period, repeats, pattern[repeats * p:])
+    return Plan((), 0, tuple(pattern))
+
+
+def stack_meta(meta, n: int):
+    """Prepend a stacking dim of size n to every ParamMeta leaf."""
+    import jax
+    from repro.pytree import is_meta
+
+    def leaf(m: ParamMeta):
+        axes = m.axes if m.axes else (None,) * len(m.shape)
+        return ParamMeta((n,) + m.shape, m.dtype, (None,) + tuple(axes),
+                         init=m.init, scale=m.scale, fan_in=m.fan_in)
+
+    return jax.tree.map(leaf, meta, is_leaf=is_meta)

@@ -1,0 +1,215 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Chunked SSD forward for train/prefill (O(S·L_c) memory, L_c = chunk length),
+O(1) recurrent step for decode.  Heads shard over the ``model`` mesh axis;
+the SSM state never crosses shards (state is per-head), so SSD needs *no*
+collectives beyond the in/out projections — this is why the hybrid/SSM archs
+are the long-context winners in the roofline table.
+
+The paper's adapters attach to in_proj ("f1") and out_proj ("f2"); the SSD
+core itself is attention-free (see DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adapters as AD
+from repro.models import layers as L
+from repro.pytree import ParamMeta
+
+
+def _dims(cfg):
+    d_inner = cfg.d_inner
+    n_heads = cfg.ssm_heads
+    n = cfg.ssm_state
+    conv_dim = d_inner + 2 * n           # x, B, C streams share the conv
+    return d_inner, n_heads, n, conv_dim
+
+
+def ssm_meta(cfg) -> dict:
+    d_inner, h, n, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    proj_out = 2 * d_inner + 2 * n + h   # [z, x, B, C, dt]
+    return {
+        "in_proj": {"w": ParamMeta((d, proj_out), cfg.pdtype,
+                                   ("embed_fsdp", None), init="normal")},
+        "conv_w": ParamMeta((cfg.ssm_conv, conv_dim), cfg.pdtype,
+                            ("conv", None), init="normal", scale=0.5),
+        "conv_b": ParamMeta((conv_dim,), cfg.pdtype, (None,), init="zeros"),
+        "a_log": ParamMeta((h,), jnp.float32, ("ssm_heads",), init="ones"),
+        "dt_bias": ParamMeta((h,), jnp.float32, ("ssm_heads",), init="zeros"),
+        "d_skip": ParamMeta((h,), jnp.float32, ("ssm_heads",), init="ones"),
+        "gate_norm": {"scale": ParamMeta((d_inner,), jnp.float32, (None,),
+                                         init="ones")},
+        "out_proj": {"w": ParamMeta((d_inner, d), cfg.pdtype,
+                                    (None, "embed_fsdp"), init="normal",
+                                    scale=0.05)},
+    }
+
+
+def ssm_adapter_meta(cfg, kind: str) -> dict:
+    d_inner, h, n, _ = _dims(cfg)
+    proj_out = 2 * d_inner + 2 * n + h
+    out = {}
+    if "w1" in cfg.adapter_targets:     # in_proj plays the "f1" role
+        ad = AD.adapter_meta(kind, cfg.d_model, proj_out, cfg.adapter_rank)
+        if ad is not None:
+            out["in_proj"] = ad
+    if "w2" in cfg.adapter_targets:     # out_proj plays the "f2" role
+        ad = AD.adapter_meta(kind, d_inner, cfg.d_model, cfg.adapter_rank)
+        if ad is not None:
+            out["out_proj"] = ad
+    return out
+
+
+def _split(proj, cfg):
+    d_inner, h, n, _ = _dims(cfg)
+    z, x, b, c, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    return z, x, b, c, dt
+
+
+def _conv_causal(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv, kernel K.  x: (B,S,C); w: (K,C).
+
+    Returns (y, new_state) where state holds the trailing K-1 inputs.
+    """
+    k = w.shape[0]
+    if state is not None:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    else:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(k))
+    y = jax.nn.silu(y + b.astype(x.dtype))
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return y, new_state
+
+
+def _gated_norm(p, y, z, cfg):
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    yn = yf * jax.lax.rsqrt((yf ** 2).mean(-1, keepdims=True) + 1e-6)
+    return (yn * p["scale"]).astype(y.dtype)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int):
+    """SSD scan.  x: (B,S,H,P) dt: (B,S,H) a: (H,) b,c: (B,S,N).
+
+    Returns y: (B,S,H,P) and the final state (B,H,P,N).
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    xc = x.reshape(bs, nc, chunk, h, p)
+    dtc = dt.reshape(bs, nc, chunk, h)
+    bc = b.reshape(bs, nc, chunk, n)
+    cc = c.reshape(bs, nc, chunk, n)
+
+    da = dtc * a                                           # (B,nc,L,H) ≤ 0
+    cum = jnp.cumsum(da, axis=2)
+    # --- intra-chunk (the "attention" dual) -------------------------------
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)             # (B,nc,L,L)
+    dec = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,i,j,H)
+    ii = jnp.arange(chunk)
+    tri = (ii[:, None] >= ii[None, :]).astype(dec.dtype)
+    lmat = dec * tri[None, None, :, :, None] * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp",
+                         cb.astype(jnp.float32), lmat,
+                         xc.astype(jnp.float32))
+    # --- chunk states ------------------------------------------------------
+    sdecay = jnp.exp(cum[:, :, -1:, :] - cum)              # (B,nc,L,H)
+    s_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchpn",
+                         bc.astype(jnp.float32), sdecay * dtc,
+                         xc.astype(jnp.float32))           # (B,nc,H,P,N)
+    # --- inter-chunk recurrence -------------------------------------------
+    total = jnp.exp(cum[:, :, -1, :])                      # (B,nc,H)
+
+    def step(hprev, inp):
+        tot, sc = inp
+        return tot[..., None, None] * hprev + sc, hprev
+
+    h0 = jnp.zeros((bs, h, p, n), jnp.float32)
+    hfin, hprevs = jax.lax.scan(
+        step, h0, (total.swapaxes(0, 1), s_chunk.swapaxes(0, 1)))
+    hprevs = hprevs.swapaxes(0, 1)                         # (B,nc,H,P,N)
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         cc.astype(jnp.float32), hprevs, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(bs, s, h, p)
+    return y.astype(x.dtype), hfin
+
+
+def ssm_apply(p, xin, cfg, *, mode="train", ad=None, masks=None, cache=None,
+              ctx=None):
+    """Returns (out, new_cache)."""
+    ad = ad or {}
+    masks = masks or {}
+    scaling = cfg.adapter_alpha / max(cfg.adapter_rank, 1)
+    d_inner, h, n, conv_dim = _dims(cfg)
+    bs, s, _ = xin.shape
+
+    proj = L.dense_apply(p["in_proj"], xin, ad.get("in_proj"),
+                         masks.get("in_proj"), scaling)
+    z, xs, b, c, dt = _split(proj, cfg)
+    a = -jnp.exp(p["a_log"])                               # (H,) < 0
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    xbc = jnp.concatenate([xs, b, c], axis=-1)
+    if mode == "decode":
+        conv_state = cache["conv"]
+        xbc, new_conv = _conv_causal(xbc, p["conv_w"], p["conv_b"], conv_state)
+        xs, b, c = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+        xh = xs.reshape(bs, h, -1)                         # (B,H,P), s == 1
+        bt, ct = b[:, 0], c[:, 0]                          # (B,N)
+        dts = dt[:, 0]                                     # (B,H)
+        hstate = cache["ssm"].astype(jnp.float32)          # (B,H,P,N)
+        decay = jnp.exp(dts * a)                           # (B,H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dts, xh.astype(jnp.float32),
+                         bt.astype(jnp.float32))
+        hnew = decay[..., None, None] * hstate + upd
+        y = jnp.einsum("bn,bhpn->bhp", ct.astype(jnp.float32), hnew)
+        y = y + p["d_skip"][None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(bs, 1, d_inner).astype(xin.dtype)
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": hnew.astype(cache["ssm"].dtype),
+                     "pos": cache["pos"] + 1}
+    else:
+        xbc, conv_tail = _conv_causal(xbc, p["conv_w"], p["conv_b"])
+        xs, b, c = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+        xh = xs.reshape(bs, s, h, -1)
+        if ctx is not None and ctx.mesh is not None:
+            from repro import sharding as SH
+            xh = SH.constrain(xh, ("batch", None, "ssm_heads", None),
+                              ctx.mesh, ctx.rules)
+        chunk = min(cfg.ssm_chunk, s)
+        if s % chunk:
+            chunk = s
+        y, hfin = ssd_chunked(xh, dt, a, b, c, chunk)
+        y = y + p["d_skip"][None, None, :, None].astype(jnp.float32) * xh.astype(jnp.float32)
+        y = y.reshape(bs, s, d_inner).astype(xin.dtype)
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            new_cache = {"conv": conv_tail.astype(cache["conv"].dtype),
+                         "ssm": hfin.astype(cache["ssm"].dtype),
+                         "pos": jnp.int32(s)}
+
+    y = _gated_norm(p["gate_norm"], y, z, cfg)
+    out = L.dense_apply(p["out_proj"], y, ad.get("out_proj"),
+                        masks.get("out_proj"), scaling)
+    return out, new_cache
+
+
+def ssm_cache_meta(cfg, batch: int) -> dict:
+    d_inner, h, n, conv_dim = _dims(cfg)
+    return {
+        "conv": ParamMeta((batch, cfg.ssm_conv - 1, conv_dim), cfg.cdtype,
+                          ("batch", None, None), init="zeros"),
+        "ssm": ParamMeta((batch, h, cfg.ssm_head_dim, n), jnp.float32,
+                         ("batch", "ssm_heads", None, None), init="zeros"),
+        "pos": ParamMeta((), jnp.int32, (), init="zeros"),
+    }

@@ -1,0 +1,92 @@
+"""Minimal functional optimizers (optax is not installed in this container).
+
+API mirrors optax: ``opt.init(params) -> state``, ``opt.update(grads, state,
+params) -> (updates, state)``.  A ``trainable_mask`` pytree of bools freezes
+leaves (used by FFA-LoRA to freeze A, and by rank-based module pruning to
+stop updating pruned modules without re-structuring the tree mid-round).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def sgd(lr: float | Callable, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        mu = _tmap(jnp.zeros_like, params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mu = _tmap(lambda m, g: momentum * m + g, state["mu"], grads)
+            upd = _tmap(lambda m: -lr_t * m, mu)
+            return upd, {"step": step, "mu": mu}
+        return _tmap(lambda g: -lr_t * g, grads), {"step": step, "mu": None}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float | Callable, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "nu": _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        mu = _tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                   state["mu"], grads)
+        nu = _tmap(lambda v, g: b2 * v + (1 - b2) * jnp.square(
+            g.astype(jnp.float32)), state["nu"], grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def u(m, v, p):
+            upd = -lr_t * (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay and p is not None:
+                upd = upd - lr_t * weight_decay * p.astype(jnp.float32)
+            return upd.astype(p.dtype if p is not None else upd.dtype)
+
+        if params is None:
+            upd = _tmap(lambda m, v: u(m, v, None), mu, nu)
+        else:
+            upd = _tmap(u, mu, nu, params)
+        return upd, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def apply_updates(params, updates, trainable_mask=None):
+    if trainable_mask is None:
+        return jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                            params, updates)
+    return jax.tree.map(
+        lambda p, u, t: p + (u * t).astype(p.dtype) if isinstance(t, (bool,))
+        else p + (u * jnp.asarray(t, u.dtype)).astype(p.dtype),
+        params, updates, trainable_mask)

@@ -1,0 +1,45 @@
+"""LR schedules: linear decay across FL rounds (the paper), plus WSD
+(warmup-stable-decay, MiniCPM [arXiv:2404.06395]) and cosine."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def linear_decay(lr: float, total_steps: int, floor: float = 0.0):
+    def f(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return jnp.float32(lr * (1 - frac) + floor * frac)
+    return f
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0, floor: float = 0.0):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.clip(s / max(warmup, 1), 0.0, 1.0)
+        prog = jnp.clip((s - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (lr - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, lr * warm, cos).astype(jnp.float32)
+    return f
+
+
+def wsd(lr: float, total_steps: int, warmup_frac: float = 0.05,
+        decay_frac: float = 0.1, floor_frac: float = 0.1):
+    """Warmup → stable → decay (MiniCPM's schedule)."""
+    warmup = max(int(total_steps * warmup_frac), 1)
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = lr * jnp.clip(s / warmup, 0.0, 1.0)
+        dec_prog = jnp.clip((s - decay_start) / max(total_steps - decay_start, 1),
+                            0.0, 1.0)
+        dec = lr * (1 - (1 - floor_frac) * dec_prog)
+        out = jnp.where(s < warmup, warm,
+                        jnp.where(s < decay_start, lr, dec))
+        return out.astype(jnp.float32)
+    return f

@@ -1,0 +1,119 @@
+"""Parameter metadata trees: one definition, three materializations.
+
+Every model layer builds a *meta tree* of :class:`ParamMeta` leaves. From it we
+derive (a) concrete arrays for smoke tests / real training, (b)
+``jax.ShapeDtypeStruct`` stand-ins for the multi-pod dry-run (no allocation),
+and (c) ``NamedSharding`` trees from the logical-axis rules in
+``repro.sharding``.  This mirrors the MaxText "logical axes" pattern without a
+flax dependency (flax is not installed in this container).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamMeta:
+    """Declarative description of a single parameter tensor."""
+
+    shape: tuple[int, ...]
+    dtype: Any = jnp.float32
+    axes: tuple[str | None, ...] = ()          # logical axis names, len == ndim
+    init: str = "normal"                       # normal | zeros | ones | scaled_normal | uniform
+    scale: float = 1.0                          # multiplier for random inits
+    fan_in: int = 0                             # 0 → shape[-2] (2D convention)
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank mismatch with shape {self.shape}")
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+def is_meta(x) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def path_of(path) -> str:
+    """Public helper: stringify a jax key-path."""
+    return _path_str(path)
+
+
+def _fold_key(key: jax.Array, path: str) -> jax.Array:
+    # Deterministic per-path key derivation, stable across tree ordering.
+    digest = hashlib.sha256(path.encode()).digest()
+    return jax.random.fold_in(key, int.from_bytes(digest[:4], "little"))
+
+
+def _materialize_leaf(meta: ParamMeta, key: jax.Array) -> jax.Array:
+    if meta.init == "zeros":
+        return jnp.zeros(meta.shape, meta.dtype)
+    if meta.init == "ones":
+        return jnp.ones(meta.shape, meta.dtype)
+    if meta.init == "normal":
+        fan_in = meta.fan_in or (
+            meta.shape[-2] if len(meta.shape) >= 2 else max(meta.shape[-1], 1))
+        std = meta.scale / np.sqrt(fan_in)
+        return (std * jax.random.normal(key, meta.shape, jnp.float32)).astype(meta.dtype)
+    if meta.init == "scaled_normal":
+        return (meta.scale * jax.random.normal(key, meta.shape, jnp.float32)).astype(meta.dtype)
+    if meta.init == "uniform":
+        return (meta.scale * jax.random.uniform(key, meta.shape, jnp.float32, -1, 1)).astype(meta.dtype)
+    raise ValueError(f"unknown init {meta.init!r}")
+
+
+def materialize(meta_tree: Tree, key: jax.Array) -> Tree:
+    """Instantiate concrete arrays for every ParamMeta leaf."""
+
+    def leaf(path, m):
+        return _materialize_leaf(m, _fold_key(key, _path_str(path)))
+
+    return jax.tree_util.tree_map_with_path(leaf, meta_tree, is_leaf=is_meta)
+
+
+def abstractify(meta_tree: Tree) -> Tree:
+    """ShapeDtypeStruct stand-ins — used by the dry-run, zero allocation."""
+    return jax.tree.map(
+        lambda m: jax.ShapeDtypeStruct(m.shape, m.dtype), meta_tree, is_leaf=is_meta)
+
+
+def tree_size(meta_tree: Tree) -> int:
+    return sum(m.size for m in jax.tree.leaves(meta_tree, is_leaf=is_meta))
+
+
+def tree_bytes(meta_tree: Tree) -> int:
+    return sum(
+        m.size * jnp.dtype(m.dtype).itemsize
+        for m in jax.tree.leaves(meta_tree, is_leaf=is_meta))
+
+
+def flatten_with_paths(tree: Tree, is_leaf: Callable | None = None):
+    """[(path_str, leaf)] in deterministic tree order."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)[0]
+    return [(_path_str(p), v) for p, v in leaves]

@@ -1,0 +1,147 @@
+"""Logical-axis → mesh-axis rules and sharding derivation.
+
+The model code annotates every parameter and activation with *logical* axis
+names ("batch", "embed", "heads", "experts", ...).  A rule table maps those to
+physical mesh axes; swapping the table re-shards the whole model without
+touching layer code — this is the knob the §Perf hillclimb turns.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import pytree
+
+# ---------------------------------------------------------------------------
+# Rule tables.  Values are mesh-axis names (or tuples for multi-axis sharding);
+# a logical axis absent from the table is replicated.
+# ---------------------------------------------------------------------------
+
+# Single-pod production mesh: ("data", "model").
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "vocab": "model",
+    "ssm_heads": "model",
+    # FSDP axis for the frozen base: big weight matrices shard their
+    # contraction dim over "data" and are all-gathered per layer.
+    "embed_fsdp": "data",
+    # never sharded:
+    "embed": None,
+    "seq": None,
+    "kv_seq": None,
+    "rank": None,
+    "conv": None,
+    "state": None,
+}
+
+# Multi-pod: the "pod" axis extends data parallelism (cross-silo FedAvg maps
+# federated client groups onto ("pod","data")).
+MULTIPOD_RULES: dict[str, Any] = dict(
+    DEFAULT_RULES,
+    batch=("pod", "data"),
+    embed_fsdp=("data",),
+)
+
+
+def rules_for(mesh: Mesh) -> dict[str, Any]:
+    return MULTIPOD_RULES if "pod" in mesh.axis_names else DEFAULT_RULES
+
+
+def spec_for_axes(axes: Sequence[str | None], rules: dict[str, Any],
+                  mesh: Mesh) -> P:
+    """PartitionSpec for one tensor given its logical axes."""
+    entries = []
+    used: set[str] = set()
+    for ax in axes:
+        ent = rules.get(ax) if ax is not None else None
+        if ent is None:
+            entries.append(None)
+            continue
+        names = (ent,) if isinstance(ent, str) else tuple(ent)
+        # Keep only axes present in the mesh and not already consumed by an
+        # earlier dim (GSPMD forbids reusing a mesh axis within one spec).
+        names = tuple(n for n in names if n in mesh.axis_names and n not in used)
+        # Drop axes that do not divide the dim size (checked by caller for
+        # shapes; here we only know names, caller passes validated axes).
+        used.update(names)
+        entries.append(names if len(names) > 1 else (names[0] if names else None))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def _divisible(shape: tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop spec entries that do not evenly divide the dim (e.g. kv_heads=1
+    cannot shard over model=16) — replicate those dims instead."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ent in zip(shape, entries):
+        if ent is None:
+            out.append(None)
+            continue
+        names = (ent,) if isinstance(ent, str) else tuple(ent)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        out.append(ent if size > 0 and dim % size == 0 else None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def sharding_tree(meta_tree, mesh: Mesh, rules: dict[str, Any] | None = None):
+    """NamedSharding tree parallel to a ParamMeta tree."""
+    rules = rules or rules_for(mesh)
+
+    def leaf(m: pytree.ParamMeta):
+        axes = m.axes if m.axes else (None,) * len(m.shape)
+        spec = spec_for_axes(axes, rules, mesh)
+        spec = _divisible(m.shape, spec, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(leaf, meta_tree, is_leaf=pytree.is_meta)
+
+
+def spec_tree(meta_tree, mesh: Mesh, rules: dict[str, Any] | None = None):
+    """PartitionSpec tree (for in_shardings given a mesh context)."""
+    rules = rules or rules_for(mesh)
+
+    def leaf(m: pytree.ParamMeta):
+        axes = m.axes if m.axes else (None,) * len(m.shape)
+        return _divisible(m.shape, spec_for_axes(axes, rules, mesh), mesh)
+
+    return jax.tree.map(leaf, meta_tree, is_leaf=pytree.is_meta)
+
+
+def batch_axes(mesh: Mesh, rules: dict[str, Any] | None = None):
+    """Physical mesh axes that carry the batch (for shard_map / collectives)."""
+    rules = rules or rules_for(mesh)
+    ent = rules.get("batch")
+    if ent is None:
+        return ()
+    return (ent,) if isinstance(ent, str) else tuple(ent)
+
+
+def model_axis(mesh: Mesh, rules: dict[str, Any] | None = None) -> str | None:
+    rules = rules or rules_for(mesh)
+    ent = rules.get("heads")
+    if ent is None:
+        return None
+    return ent if isinstance(ent, str) else ent[0]
+
+
+def constrain(x: jax.Array, axes: Sequence[str | None], mesh: Mesh | None,
+              rules: dict[str, Any] | None = None) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op without a mesh)."""
+    if mesh is None or mesh.empty or len(mesh.devices.flatten()) == 1:
+        return x
+    rules = rules or rules_for(mesh)
+    spec = _divisible(x.shape, spec_for_axes(axes, rules, mesh), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,24 @@
+import os
+
+# Smoke tests and benches must see 1 device — the 512-device override lives
+# ONLY in repro.launch.dryrun (never set it here or globally).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=20, deadline=None,
+                          derandomize=True)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.key(0)

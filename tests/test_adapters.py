@@ -1,0 +1,90 @@
+"""Truncated-SVD (BEA) adapter semantics (paper §IV-A)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adapters as AD
+from repro.pytree import materialize
+
+
+def _mk(kind, d_in=16, d_out=12, r=4, n_experts=0, key=0):
+    meta = AD.adapter_meta(kind, d_in, d_out, r, n_experts=n_experts)
+    return materialize(meta, jax.random.key(key))
+
+
+def test_bea_zero_at_init():
+    ad = _mk(AD.BEA)
+    x = jnp.ones((3, 16))
+    y0 = jnp.zeros((3, 12))
+    out = AD.apply_adapter(y0, x, ad, None, scaling=2.0)
+    np.testing.assert_allclose(out, 0.0)        # E = 0 ⇒ ΔW = 0
+    assert float(jnp.abs(ad["A"]).sum()) > 0    # symmetric Gaussian A
+    assert float(jnp.abs(ad["B"]).sum()) > 0    # ... and B
+
+
+def test_lora_zero_at_init():
+    ad = _mk(AD.LORA)
+    x = jnp.ones((3, 16))
+    out = AD.apply_adapter(jnp.zeros((3, 12)), x, ad, None, 2.0)
+    np.testing.assert_allclose(out, 0.0)        # B = 0 ⇒ ΔW = 0
+    assert float(jnp.abs(ad["B"]).sum()) == 0
+
+
+def test_masked_ranks_are_inert_and_gradient_free():
+    ad = _mk(AD.BEA)
+    ad = dict(ad, E=jnp.ones(4))                # activate all ranks
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(5, 16)),
+                    jnp.float32)
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+
+    def f(adp):
+        return AD.apply_adapter(jnp.zeros((5, 12)), x, adp, mask, 1.0).sum()
+
+    g = jax.grad(f)(ad)
+    # masked ranks receive exactly zero gradient in A, B and E
+    np.testing.assert_allclose(np.asarray(g["A"])[1], 0.0)
+    np.testing.assert_allclose(np.asarray(g["A"])[3], 0.0)
+    np.testing.assert_allclose(np.asarray(g["B"])[:, 1], 0.0)
+    np.testing.assert_allclose(np.asarray(g["E"])[1], 0.0)
+    assert float(np.abs(np.asarray(g["A"])[0]).sum()) > 0
+
+    # zeroing masked ranks' params does not change the output (CommPru)
+    out1 = AD.apply_adapter(jnp.zeros((5, 12)), x, ad, mask, 1.0)
+    ad2 = dict(ad,
+               A=ad["A"].at[1].set(0).at[3].set(0),
+               B=ad["B"].at[:, 1].set(0).at[:, 3].set(0),
+               E=ad["E"].at[1].set(0).at[3].set(0))
+    out2 = AD.apply_adapter(jnp.zeros((5, 12)), x, ad2, mask, 1.0)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6)
+
+
+def test_per_expert_adapter_shapes():
+    ad = _mk(AD.BEA, n_experts=3)
+    assert ad["A"].shape == (3, 4, 16)
+    assert ad["B"].shape == (3, 12, 4)
+    assert ad["E"].shape == (3, 4)
+    x = jnp.ones((3, 7, 16))                     # (E, C, d_in)
+    ad = dict(ad, E=jnp.ones((3, 4)))
+    out = AD.apply_adapter(jnp.zeros((3, 7, 12)), x, ad,
+                           jnp.asarray([1., 0., 1., 1.]), 1.0)
+    assert out.shape == (3, 7, 12)
+    assert float(jnp.abs(out).sum()) > 0
+
+
+def test_delta_w_matches_apply():
+    ad = _mk(AD.BEA)
+    ad = dict(ad, E=jnp.asarray([0.5, -1.0, 2.0, 0.1]))
+    mask = jnp.asarray([1.0, 1.0, 0.0, 1.0])
+    dw = AD.delta_w(ad, mask, scaling=1.7)       # (d_out, d_in)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(6, 16)), jnp.float32)
+    got = AD.apply_adapter(jnp.zeros((6, 12)), x, ad, mask, 1.7)
+    np.testing.assert_allclose(got, x @ dw.T, rtol=2e-5, atol=2e-5)
+
+
+def test_bottleneck_identity_at_init():
+    meta = AD.bottleneck_meta(10, 4)
+    ad = materialize(meta, jax.random.key(0))
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(3, 10)), jnp.float32)
+    np.testing.assert_allclose(AD.apply_bottleneck(x, ad), x, rtol=1e-6)

@@ -1,0 +1,23 @@
+import jax
+import numpy as np
+
+from repro import checkpoint as CK
+from repro.configs import get_config
+from repro.models import Model
+
+
+def test_roundtrip(tmp_path):
+    cfg = get_config("qwen2_0p5b", smoke=True)
+    model = Model(cfg, peft="bea", unroll=True)
+    _, tr = model.init(jax.random.key(0))
+    masks = jax.tree.map(np.asarray, model.init_masks())
+    p = str(tmp_path / "run")
+    CK.save_run(p, trainable=tr, masks=masks, rnd=7, seed=3,
+                extra={"strategy": "fedara"})
+    tr2, masks2, meta = CK.restore_run(p)
+    assert meta["round"] == 7 and meta["strategy"] == "fedara"
+    for (pa, a), (pb, b) in zip(
+            CK.ckpt.flatten_with_paths(jax.tree.map(np.asarray, tr)),
+            CK.ckpt.flatten_with_paths(tr2)):
+        assert pa == pb
+        np.testing.assert_allclose(a, b)

@@ -1,0 +1,52 @@
+"""Client partitioning properties."""
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.federated.partition import (dirichlet_partition, iid_partition,
+                                       label_histograms,
+                                       pathological_partition)
+
+
+@given(alpha=st.sampled_from([0.01, 0.1, 1.0, 1000.0]),
+       n_clients=st.integers(2, 20), seed=st.integers(0, 20))
+def test_dirichlet_partition_is_a_partition(alpha, n_clients, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, 500)
+    parts = dirichlet_partition(labels, n_clients, alpha, seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 500
+    assert len(np.unique(allidx)) == 500          # disjoint and complete
+
+
+def test_dirichlet_skew_increases_with_smaller_alpha():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, 2000)
+
+    def skew(alpha):
+        parts = dirichlet_partition(labels, 10, alpha, 0)
+        h = label_histograms(labels, parts, 10).astype(float)
+        h = h / np.maximum(h.sum(1, keepdims=True), 1)
+        # mean entropy of per-client label distribution (lower = more skew)
+        ent = -(h * np.log(h + 1e-12)).sum(1).mean()
+        return ent
+
+    assert skew(0.01) < skew(0.1) < skew(1000.0)
+
+
+def test_pathological_limits_labels_per_client():
+    rng = np.random.default_rng(0)
+    labels = np.sort(rng.integers(0, 20, 2000))
+    parts = pathological_partition(labels, 100, 2, seed=0)
+    n_labels = [len(np.unique(labels[p])) for p in parts]
+    assert max(n_labels) <= 3          # 2 shards → ≤ 2-3 labels at boundaries
+    assert np.mean(n_labels) < 2.6
+    allidx = np.concatenate(parts)
+    assert len(np.unique(allidx)) == len(allidx)
+
+
+def test_iid_partition_balanced():
+    labels = np.arange(1000) % 10
+    parts = iid_partition(labels, 10, 0)
+    sizes = [len(p) for p in parts]
+    assert max(sizes) - min(sizes) <= 1

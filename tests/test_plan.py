@@ -1,0 +1,39 @@
+"""Layer-plan periodicity properties."""
+
+from hypothesis import given, strategies as st
+
+from repro.models.plan import Plan, build_plan
+
+KINDS = ["attn", "local", "moe", "mamba"]
+
+
+@given(st.lists(st.sampled_from(KINDS), min_size=1, max_size=30))
+def test_plan_reconstructs_pattern(pattern):
+    pattern = tuple(pattern)
+    plan = build_plan(pattern)
+    rebuilt = tuple(plan.period) * plan.repeats + tuple(plan.tail)
+    assert rebuilt == pattern
+    assert plan.n_layers == len(pattern)
+
+
+def test_known_patterns():
+    # kimi: uniform
+    p = build_plan(("moe",) * 61)
+    assert p.period == ("moe",) and p.repeats == 61 and not p.tail
+    # gemma2: alternating
+    p = build_plan(("local", "attn") * 13)
+    assert p.period == ("local", "attn") and p.repeats == 13
+    # gemma3: 5:1 with remainder
+    pat = (("local",) * 5 + ("attn",)) * 4 + ("local", "local")
+    p = build_plan(pat)
+    assert p.period == ("local",) * 5 + ("attn",)
+    assert p.repeats == 4 and p.tail == ("local", "local")
+    # zamba2
+    pat = (("mamba",) * 5 + ("shared_attn",)) * 6 + ("mamba", "mamba")
+    p = build_plan(pat)
+    assert p.repeats == 6 and p.tail == ("mamba", "mamba")
+
+
+def test_single_layer_no_scan():
+    p = build_plan(("attn",))
+    assert p.repeats == 0 and p.tail == ("attn",)

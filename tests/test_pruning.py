@@ -1,0 +1,57 @@
+"""RankDet / rank-based module pruning (paper §IV-C)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adapters as AD
+from repro.core import pruning as PR
+from repro.pytree import materialize
+
+
+def _tree(key=0):
+    return {
+        "l0": {"wq": materialize(AD.adapter_meta(AD.BEA, 8, 8, 4),
+                                 jax.random.key(key))},
+        "l1": {"wq": materialize(AD.adapter_meta(AD.BEA, 8, 8, 4),
+                                 jax.random.key(key + 1))},
+    }
+
+
+def test_trainable_gate_zeroes_dead_modules():
+    tr = _tree()
+    masks = {"l0": {"wq": np.zeros(4, bool)},
+             "l1": {"wq": np.array([True, False, False, False])}}
+    gate = PR.trainable_gate(tr, masks)
+    for part in ("A", "B", "E"):
+        assert float(jnp.abs(gate["l0"]["wq"][part]).max()) == 0.0
+        assert float(jnp.abs(gate["l1"]["wq"][part]).min()) == 1.0
+
+
+def test_dead_modules_and_structural_prune():
+    tr = _tree()
+    masks = {"l0": {"wq": np.zeros(4, bool)},
+             "l1": {"wq": np.ones(4, bool)}}
+    assert PR.dead_modules(masks) == ["l0.wq"]
+    pruned = PR.prune_structurally(tr, masks)
+    assert "l0" not in pruned and "l1" in pruned
+    assert PR.count_trainable(pruned) < PR.count_trainable(tr)
+
+
+def test_stacked_gate_per_layer():
+    """Scan-stacked module: per-layer gating without structure changes."""
+    mod = {"A": jnp.ones((3, 4, 8)), "B": jnp.ones((3, 8, 4)),
+           "E": jnp.ones((3, 4))}
+    masks = {"m": np.array([[True] * 4, [False] * 4, [True] * 4])}
+    gate = PR.trainable_gate({"m": mod}, masks)
+    g = np.asarray(gate["m"]["A"])
+    assert g[0].min() == 1.0 and g[1].max() == 0.0 and g[2].min() == 1.0
+
+
+def test_adapter_flops_shrink_with_masks():
+    tr = _tree()
+    full = PR.adapter_flops_per_token(tr, None)
+    half = PR.adapter_flops_per_token(
+        tr, {"l0": {"wq": np.array([True, True, False, False])},
+             "l1": {"wq": np.zeros(4, bool)}})
+    assert half == full // 4

@@ -1,0 +1,42 @@
+"""Rank-budget schedule (paper Eq. 13) properties."""
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.schedule import budget_series, rank_budget
+
+
+@given(b0=st.integers(16, 4096), frac=st.floats(0.1, 0.9),
+       tw=st.integers(0, 10), tf=st.integers(0, 10),
+       total=st.integers(25, 200))
+def test_schedule_monotone_and_bounded(b0, frac, tw, tf, total):
+    bt = int(b0 * frac)
+    series = budget_series(total, b0=b0, b_target=bt, t_warmup=tw, t_final=tf)
+    assert all(bt <= b <= b0 for b in series)
+    # warm-up holds b0; afterwards non-increasing
+    for t in range(min(tw, total)):
+        assert series[t] == b0
+    post = series[tw:]
+    assert all(x >= y for x, y in zip(post, post[1:]))
+    # final stabilized rounds hold the target
+    for t in range(max(total - tf, tw), total):
+        assert series[t] == bt
+
+
+def test_schedule_cubic_shape():
+    # decay is cubic: drop is slow near t_w, fast near the end of decay
+    b = lambda t: rank_budget(t, b0=1000, b_target=250, t_warmup=0,
+                              t_final=50, total_rounds=100)
+    first_drop = b(0) - b(10)
+    last_drop = b(35) - b(45)
+    assert b(0) == 1000 and b(60) == 250
+    assert first_drop > last_drop          # cubic (1-x)^3 decays fastest first
+
+
+def test_paper_setting():
+    """Paper §V: decay from 5 warm-up rounds until round 50 of 100,
+    targeting one quarter of the initial rank."""
+    series = budget_series(100, b0=1200, b_target=300, t_warmup=5, t_final=50)
+    assert series[4] == 1200
+    assert series[55] == 300
+    assert series[99] == 300

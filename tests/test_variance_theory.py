@@ -1,0 +1,52 @@
+"""Empirical check of the paper's drift-variance analysis (Eqs. 3–10):
+E‖ΔW_BA‖²_F = Θ(r²) under cross-rank covariance, while the diagonal E of the
+truncated-SVD adaptation suppresses the quadratic term: E‖ΔW_BEA‖² = Θ(r)."""
+
+import numpy as np
+
+
+def _sim(r, d=64, k=200, rho=0.6, seed=0):
+    """Simulate the separable-covariance model of Eq. 7: columns share a
+    common component (cross-rank covariance ρ)."""
+    rng = np.random.default_rng(seed)
+    # b_i = sqrt(rho)·z + sqrt(1-rho)·g_i  → E[b_i·b_j] = rho·d for i≠j
+    def correlated(n):
+        z = rng.normal(size=(k, 1, d))
+        g = rng.normal(size=(k, n, d))
+        return np.sqrt(rho) * z + np.sqrt(1 - rho) * g
+    b = correlated(r)                       # (k, r, d)
+    a = correlated(r)
+    e = rng.normal(size=(k, r))             # zero-mean independent (Eq. 8)
+    dw_ba = np.einsum("kri,krj->kij", b, a)
+    dw_bea = np.einsum("kr,kri,krj->kij", e, b, a)
+    return (np.mean(np.sum(dw_ba ** 2, axis=(1, 2))),
+            np.mean(np.sum(dw_bea ** 2, axis=(1, 2))))
+
+
+def test_variance_scaling_theta_r2_vs_theta_r():
+    ranks = [2, 4, 8, 16]
+    ba, bea = zip(*[_sim(r) for r in ranks])
+    # BA grows ~r²: quadruple r (2→8) ⇒ ≳8× growth; BEA ~r ⇒ ~4×±slack
+    growth_ba = ba[2] / ba[0]
+    growth_bea = bea[2] / bea[0]
+    assert growth_ba > 8.0, growth_ba
+    assert growth_bea < 8.0, growth_bea
+    # log-log slope: BA ≈ 2, BEA ≈ 1
+    slope_ba = np.polyfit(np.log(ranks), np.log(ba), 1)[0]
+    slope_bea = np.polyfit(np.log(ranks), np.log(bea), 1)[0]
+    assert slope_ba > 1.6, slope_ba
+    assert slope_bea < 1.4, slope_bea
+
+
+def test_no_cross_covariance_both_linear():
+    """With ρ_aρ_b = 0 both methods are Θ(r) (paper's caveat)."""
+    ranks = [2, 4, 8, 16]
+    ba = []
+    for r in ranks:
+        rng = np.random.default_rng(r)
+        b = rng.normal(size=(200, r, 64))
+        a = rng.normal(size=(200, r, 64))
+        dw = np.einsum("kri,krj->kij", b, a)
+        ba.append(np.mean(np.sum(dw ** 2, axis=(1, 2))))
+    slope = np.polyfit(np.log(ranks), np.log(ba), 1)[0]
+    assert slope < 1.3, slope
