@@ -1,13 +1,33 @@
-"""Batched serving with a PEFT-adapted model: prefill a batch of prompts,
-decode greedily, across three different architecture families (dense GQA,
-sliding-window, SSM).
+"""Batched serving with PEFT-adapted models across three architecture
+families (dense GQA, sliding-window, SSM) — driving the multi-tenant engine
+API directly (one process, no argv re-parsing; one engine per family since
+each family is a different base model).
 
   PYTHONPATH=src python examples/serve_batched.py
 """
 
-from repro.launch import serve
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.serve import build_engine, serve_requests
+
+GEN, PROMPT, N_REQ = 8, 24, 4
 
 for arch in ["qwen2_0p5b", "gemma3_1b", "mamba2_780m"]:
     print(f"=== {arch} ===")
-    serve.main(["--arch", arch, "--smoke", "--batch", "4",
-                "--prompt-len", "24", "--gen", "8"])
+    cfg = get_config(arch, smoke=True)
+    engine = build_engine(cfg, n_slots=N_REQ, max_seq=PROMPT + GEN,
+                          n_tenants=2)
+    rng = np.random.default_rng(0)
+    tenant_ids = engine.registry.ids()
+    prompts = [rng.integers(0, cfg.vocab_size, PROMPT) for _ in range(N_REQ)]
+    adapters = [tenant_ids[i % len(tenant_ids)] for i in range(N_REQ)]
+    t0 = time.time()
+    reqs = serve_requests(engine, prompts, adapters, GEN)
+    wall = time.time() - t0
+    n_tok = sum(len(r.out) for r in reqs)
+    print(f"{n_tok} tokens in {wall:.2f}s ({n_tok / wall:.1f} tok/s), "
+          f"{engine.steps} steps")
+    print("first request:", reqs[0].out)

@@ -1,0 +1,81 @@
+"""Multi-tenant serving demo: many simulated FedARA tenants, mixed ranks,
+mixed arrival times, one engine instance — with a per-request correctness
+audit against the unbatched path.
+
+16 concurrent requests attach to 4 distinct adapters at 3 distinct ranks
+{4, 8, 12}; half the requests arrive only after the engine has already been
+decoding for a few steps (continuous batching admits them as slots free up
+— no static-batch barrier).  Every request's greedy tokens are then compared
+with running that request *alone* through a single-slot engine: batching must
+not change any output.
+
+  PYTHONPATH=src python examples/serve_multitenant.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.serve import make_tenants
+from repro.models import Model
+from repro.serving import ServingEngine
+
+ARCH = "qwen2_0p5b"
+RANKS = [4, 8, 12, 8]          # 4 tenants, 3 distinct ranks
+N_REQ, GEN = 16, 6
+MAX_SEQ = 48
+
+cfg = get_config(ARCH, smoke=True)
+model = Model(cfg, peft="bea")
+base, _ = model.init(jax.random.key(0))
+tenants = make_tenants(model, cfg, len(RANKS), ranks=RANKS, seed=0)
+
+engine = ServingEngine(model, base, n_slots=8, max_seq=MAX_SEQ)
+for tid, spec in tenants.items():
+    engine.register_adapter(tid, spec["trainable"], spec["masks"],
+                            rank=spec["rank"], alpha=cfg.adapter_alpha)
+
+rng = np.random.default_rng(1)
+tenant_ids = list(tenants)
+plans = []                      # (adapter_id, prompt) per request
+for i in range(N_REQ):
+    plans.append((tenant_ids[i % len(tenant_ids)],
+                  rng.integers(0, cfg.vocab_size, int(rng.integers(8, 24)))))
+
+# Mixed arrival: first wave up front, second wave mid-flight.
+t0 = time.time()
+reqs = [engine.submit(aid, p, GEN) for aid, p in plans[:N_REQ // 2]]
+for _ in range(3):
+    engine.step()
+reqs += [engine.submit(aid, p, GEN) for aid, p in plans[N_REQ // 2:]]
+engine.run()
+wall = time.time() - t0
+
+n_tok = sum(len(r.out) for r in reqs)
+st = engine.stats()
+print(f"arch={cfg.name}: {N_REQ} requests, {len(tenant_ids)} adapters, "
+      f"ranks={sorted(set(RANKS))}, slots=8")
+print(f"{n_tok} tokens in {wall:.2f}s ({n_tok / wall:.1f} tok/s), "
+      f"{engine.steps} engine steps, {st['decode_calls']} decode calls, "
+      f"registry buckets={st['registry']['buckets']}")
+
+# ---- audit: batched outputs must equal the unbatched path ------------------
+mismatches = 0
+for req, (aid, prompt) in zip(reqs, plans):
+    solo = ServingEngine(model, base, n_slots=1, max_seq=MAX_SEQ)
+    spec = tenants[aid]
+    solo.register_adapter(aid, spec["trainable"], spec["masks"],
+                          rank=spec["rank"], alpha=cfg.adapter_alpha)
+    solo_req = solo.submit(aid, prompt, GEN)
+    solo.run()
+    if solo_req.out != req.out:
+        mismatches += 1
+        print(f"MISMATCH rid={req.rid} adapter={aid}: "
+              f"batched={req.out} solo={solo_req.out}")
+
+if mismatches:
+    raise SystemExit(f"{mismatches}/{N_REQ} requests diverged from the "
+                     f"unbatched path")
+print(f"audit: all {N_REQ} batched outputs identical to the unbatched path")

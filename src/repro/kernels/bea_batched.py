@@ -1,0 +1,130 @@
+"""Rank-heterogeneous *batched* masked-BEA matmul — the multi-tenant serving
+hot-spot: every row of ``x`` attaches its own FedARA adapter to one frozen
+linear in a single fused pass:
+
+    y[i] = x[i]·W + s · ((x[i]·A_{g_i}ᵀ) ⊙ (e_{g_i}⊙m_{g_i})) · B_{g_i}ᵀ
+
+where ``g_i = idx[i]`` selects one of G adapters stacked at a common bucket
+rank r (shorter adapters are zero-padded with their masks extended by False —
+per CommPru semantics a masked rank is exactly free, so padding is free too).
+
+TPU mapping (extends ``bea_fused.py``):
+  grid = (M/bm, N/bn, K/bk), k fastest.  The adapter stacks A (G, r, bk) and
+  Bᵀ (G, r, bn) are VMEM-resident per (j, k) tile; the per-row adapter choice
+  rides along as a one-hot (bm, G) tile.  The rank accumulator is widened to
+  u = x·A_allᵀ (bm, G·r): one MXU dot against the flattened stack per k step.
+  At the last k step the epilogue folds the one-hot and the masked diagonal
+  into u and applies a single (bm, G·r)·(G·r, bn) MXU dot — the per-row
+  select costs no gather/scatter, only the G× wider rank accumulator, which
+  for serving-sized G·r (≤ a few hundred) stays comfortably inside VMEM:
+  footprint ≈ bm·bk + bk·bn + bm·bn·4 + G·r·(bk+bn) + bm·G·r·4.
+
+Degenerate buckets: G == 0 or r == 0 (fully-pruned bucket) short-circuit to
+the plain matmul — rank-0 tenants cost exactly a dense forward.
+
+Validated against kernels/ref.py:bea_batched_ref with interpret=True (this
+container is CPU-only; TPU is the target, not the runtime).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.bea_fused import _pad_to
+
+
+def _kernel(x_ref, w_ref, a_ref, bt_ref, em_ref, oh_ref, out_ref,
+            acc_ref, u_ref, *, scaling: float, k_steps: int, g: int, r: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        u_ref[...] = jnp.zeros_like(u_ref)
+
+    xb = x_ref[...]
+    acc_ref[...] += jnp.dot(xb, w_ref[...],
+                            preferred_element_type=jnp.float32)
+    # One dot against the whole stack: A (G, r, bk) → (G·r, bk).
+    a_flat = a_ref[...].reshape(g * r, -1)
+    u_ref[...] += jnp.dot(xb, a_flat.T, preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        bm = u_ref.shape[0]
+        u = u_ref[...].reshape(bm, g, r)
+        # Fold the masked diagonal (G, r) and the row one-hot (bm, G); rows
+        # of t outside the row's adapter are zero, so one flat dot suffices.
+        t = u * em_ref[...][None] * oh_ref[...][:, :, None]
+        bt_flat = bt_ref[...].reshape(g * r, -1)       # (G·r, bn)
+        delta = jnp.dot(t.reshape(bm, g * r).astype(bt_ref.dtype), bt_flat,
+                        preferred_element_type=jnp.float32)
+        out_ref[...] = (acc_ref[...] + scaling * delta).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scaling", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def _bea_batched_call(x, w, a, bt, em, onehot, scaling, block_m, block_n,
+                      block_k, interpret):
+    m0, k0 = x.shape
+    n0 = w.shape[1]
+    g, r = em.shape
+    bm, bn, bk = (min(block_m, max(m0, 8)), min(block_n, max(n0, 8)),
+                  min(block_k, max(k0, 8)))
+
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    ap = _pad_to(a, bk, 2)
+    btp = _pad_to(bt, bn, 2)
+    ohp = _pad_to(onehot, bm, 0)          # padded rows select no adapter
+
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scaling=scaling, k_steps=grid[2],
+                          g=g, r=r),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((g, r, bk), lambda i, j, k: (0, 0, k)),
+            pl.BlockSpec((g, r, bn), lambda i, j, k: (0, 0, j)),
+            pl.BlockSpec((g, r), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((bm, g), lambda i, j, k: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, g * r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, wp, ap, btp, em, ohp)
+    return out[:m0, :n0]
+
+
+def bea_batched(x, w, a_stack, b_stack, e_stack, m_stack, idx,
+                scaling: float = 1.0, block_m: int = 128, block_n: int = 256,
+                block_k: int = 512, interpret: bool = True):
+    """Fused y[i] = x[i]@W + s·((x[i] A_gᵀ)⊙(e_g⊙m_g))B_gᵀ, g = idx[i].
+
+    x: (M, K); w: (K, N); a_stack: (G, r, K); b_stack: (G, N, r);
+    e_stack/m_stack: (G, r); idx: (M,) int32 in [0, G).
+    Shapes are padded to block multiples; the result is sliced back.
+    """
+    g = a_stack.shape[0]
+    r = a_stack.shape[1] if g else 0
+    if g == 0 or r == 0:                    # fully-pruned bucket: dense only
+        return jnp.dot(x, w.astype(x.dtype))
+    em = (e_stack * m_stack.astype(e_stack.dtype)).astype(jnp.float32)
+    bt = jnp.swapaxes(b_stack, 1, 2)        # (G, r, N): epilogue-ready layout
+    onehot = (idx[:, None] == jnp.arange(g)[None, :]).astype(jnp.float32)
+    return _bea_batched_call(x, w, a_stack, bt, em, onehot, scaling,
+                             block_m, block_n, block_k, interpret)

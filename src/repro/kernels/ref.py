@@ -17,6 +17,25 @@ def bea_dense_ref(x, w, a, b, e, mask, scaling: float):
     return y + scaling * jnp.einsum("mr,nr->mn", u, b.astype(x.dtype))
 
 
+def bea_batched_ref(x, w, a_stack, b_stack, e_stack, m_stack, idx,
+                    scaling: float):
+    """Sequential per-request reference for the multi-tenant batched kernel.
+
+    Row ``i`` of ``x`` is served with adapter ``idx[i]`` — each row is routed
+    through :func:`bea_dense_ref` on its own, exactly as an unbatched engine
+    would run the requests one at a time.
+
+    x: (M, K); w: (K, N); a_stack: (G, r, K); b_stack: (G, N, r);
+    e_stack/m_stack: (G, r); idx: (M,) int32 in [0, G).
+    """
+    rows = []
+    for i in range(x.shape[0]):
+        g = int(idx[i])
+        rows.append(bea_dense_ref(x[i:i + 1], w, a_stack[g], b_stack[g],
+                                  e_stack[g], m_stack[g], scaling))
+    return jnp.concatenate(rows, axis=0)
+
+
 def lora_dense_ref(x, w, a, b, mask, scaling: float):
     y = jnp.einsum("mk,kn->mn", x, w.astype(x.dtype))
     u = jnp.einsum("mk,rk->mr", x, a.astype(x.dtype)) * mask.astype(x.dtype)

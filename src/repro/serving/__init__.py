@@ -1,0 +1,11 @@
+"""Multi-tenant adapter serving: registry + continuous-batching scheduler +
+engine.  Every FedARA client ends a federated run with its own SVD adapter at
+its own surviving rank; this package batches requests that attach *different*
+adapters at *different* ranks to one frozen base model."""
+
+from repro.serving.engine import ServingEngine
+from repro.serving.registry import AdapterRegistry, RegistryFullError
+from repro.serving.scheduler import Request, Scheduler
+
+__all__ = ["AdapterRegistry", "RegistryFullError", "Request", "Scheduler",
+           "ServingEngine"]

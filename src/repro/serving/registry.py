@@ -1,0 +1,277 @@
+"""Adapter registry: per-tenant FedARA adapter trees, normalized for serving.
+
+Each federated client finishes training with (a) a BEA adapter tree at its own
+live rank r_t, (b) a rank-mask tree (dynamic rank allocation + CommPru), and
+(c) its own LoRA-style scaling α/r_t.  The registry normalizes all of that at
+registration time so the engine only ever sees *bucket-homogeneous* tensors:
+
+  - rank axes are zero-padded up to the tenant's rank bucket (smallest
+    configured bucket ≥ r_t) with masks extended by False — a masked rank is
+    exactly free (CommPru), so padding is semantically free;
+  - the tenant scaling is folded into the diagonal E (into B for pure-LoRA
+    adapters), so heterogeneous α/r_t tenants coexist under the engine's one
+    static scaling constant;
+  - host-memory accounting (bytes of the padded trees) drives LRU eviction
+    with pinning and engine-held refcounts (an adapter attached to a live
+    request is never evicted).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+class RegistryFullError(RuntimeError):
+    """Capacity exceeded and nothing is evictable (all pinned / in use)."""
+
+
+def bucket_for(rank: int, bucket_sizes: tuple[int, ...]) -> int:
+    """Smallest configured bucket ≥ rank (rank itself past the largest)."""
+    for b in bucket_sizes:
+        if b >= rank:
+            return b
+    return rank
+
+
+def _pad_axis(arr, axis: int, new: int):
+    old = arr.shape[axis]
+    if old == new:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, new - old)
+    return jnp.pad(arr, widths)
+
+
+def pad_adapters(ad_tree: Any, mask_tree: Any, bucket: int, ratio: float):
+    """Pad every BEA/LoRA module to ``bucket`` ranks and fold the scaling
+    ratio; returns (padded_adapters, padded_masks).
+
+    Module dicts are {"A": (..., r, K), "B": (..., N, r)[, "E": (..., r)]};
+    the mask leaf at the same path is (..., r) (expert axis stripped).
+    """
+    if isinstance(ad_tree, dict) and "A" in ad_tree and "B" in ad_tree:
+        out = {"A": _pad_axis(ad_tree["A"], -2, bucket)}
+        if "E" in ad_tree:
+            out["B"] = _pad_axis(ad_tree["B"], -1, bucket)
+            out["E"] = _pad_axis(ad_tree["E"] * ratio, -1, bucket)
+        else:                               # pure LoRA: fold ratio into B
+            out["B"] = _pad_axis(ad_tree["B"] * ratio, -1, bucket)
+        if mask_tree is None:
+            raise ValueError("BEA/LoRA module without a rank mask")
+        pm = _pad_axis(mask_tree.astype(jnp.bool_), -1, bucket)
+        return out, pm
+    if isinstance(ad_tree, dict):
+        if "down" in ad_tree:
+            raise NotImplementedError(
+                "bottleneck adapters are not rank-bucketable; serve BEA/LoRA")
+        ads, msks = {}, {}
+        for k, v in ad_tree.items():
+            sub_m = mask_tree.get(k) if isinstance(mask_tree, dict) else None
+            ads[k], msks[k] = pad_adapters(v, sub_m, bucket, ratio)
+        return ads, msks
+    raise ValueError(f"unexpected adapter leaf {type(ad_tree)!r}")
+
+
+def tree_nbytes(tree: Any) -> int:
+    return sum(leaf.nbytes for leaf in jax.tree.leaves(tree))
+
+
+@dataclasses.dataclass
+class AdapterEntry:
+    adapter_id: str
+    serial: int                   # monotone — cache keys survive re-register
+    rank: int                     # tenant's live rank
+    bucket: int                   # padded rank bucket
+    adapters: Any                 # padded {"dec": ...} adapter tree
+    masks: Any                    # padded mask tree
+    nbytes: int
+    pinned: bool = False
+    refcount: int = 0
+    hits: int = 0
+
+    @property
+    def evictable(self) -> bool:
+        return not self.pinned and self.refcount == 0
+
+
+class AdapterRegistry:
+    """LRU adapter store keyed by adapter_id.
+
+    ``serving_scaling`` is the engine model's α/max(r, 1) constant; tenant
+    adapters registered with their own (alpha, rank) are refolded against it.
+    """
+
+    def __init__(self, serving_scaling: float,
+                 bucket_sizes: tuple[int, ...] = (4, 8, 16, 32, 64),
+                 capacity_bytes: int | None = None,
+                 max_entries: int | None = None,
+                 loader: Callable[[str], dict] | None = None):
+        if serving_scaling <= 0:
+            raise ValueError("serving_scaling must be positive")
+        self.serving_scaling = float(serving_scaling)
+        self.bucket_sizes = tuple(sorted(bucket_sizes))
+        self.capacity_bytes = capacity_bytes
+        self.max_entries = max_entries
+        self.loader = loader
+        self._entries: OrderedDict[str, AdapterEntry] = OrderedDict()
+        self._serial = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # ---- core ------------------------------------------------------------
+
+    def register(self, adapter_id: str, trainable: Any, masks: Any, *,
+                 rank: int | None = None, alpha: float | None = None,
+                 scaling: float | None = None, pin: bool = False
+                 ) -> AdapterEntry:
+        """Normalize + admit one tenant's adapters.
+
+        ``trainable`` is a Model trainable tree ({"adapters": ...}) or a bare
+        adapter tree; ``scaling`` overrides the tenant α/r (default: α=16
+        convention via ``alpha`` and the tree's own rank).
+        """
+        ad = trainable.get("adapters", trainable) if isinstance(
+            trainable, dict) else trainable
+        if rank is None:
+            rank = _infer_rank(ad)
+        if scaling is None:
+            scaling = (16.0 if alpha is None else alpha) / max(rank, 1)
+        bucket = bucket_for(rank, self.bucket_sizes)
+        ratio = scaling / self.serving_scaling
+        padded, pmasks = pad_adapters(ad, masks, bucket, ratio)
+        self._serial += 1
+        entry = AdapterEntry(
+            adapter_id=adapter_id, serial=self._serial, rank=rank,
+            bucket=bucket, adapters=padded, masks=pmasks,
+            nbytes=tree_nbytes(padded) + tree_nbytes(pmasks), pinned=pin)
+        old = self._entries.pop(adapter_id, None)
+        if old is not None:
+            entry.refcount = old.refcount     # live requests keep their hold
+            entry.pinned = pin or old.pinned  # re-register never drops a pin
+        self._entries[adapter_id] = entry
+        try:
+            self._evict_to_fit(exclude=adapter_id)
+        except RegistryFullError:
+            # Atomic failure: refuse the new entry, restore the old one
+            # (_evict_to_fit checks feasibility before evicting anyone).
+            del self._entries[adapter_id]
+            if old is not None:
+                self._entries[adapter_id] = old
+            raise
+        return entry
+
+    def get(self, adapter_id: str) -> AdapterEntry:
+        """LRU-touching lookup; falls back to ``loader`` on a miss."""
+        entry = self._entries.get(adapter_id)
+        if entry is None:
+            self.misses += 1
+            if self.loader is None:
+                raise KeyError(adapter_id)
+            spec = self.loader(adapter_id)
+            entry = self.register(adapter_id, **spec)
+        else:
+            self.hits += 1
+            entry.hits += 1
+            self._entries.move_to_end(adapter_id)
+        return entry
+
+    def acquire(self, adapter_id: str) -> AdapterEntry:
+        """get() + refcount hold — the engine calls this per admitted request
+        so live adapters are never evicted mid-decode."""
+        entry = self.get(adapter_id)
+        entry.refcount += 1
+        return entry
+
+    def release(self, adapter_id: str) -> None:
+        entry = self._entries[adapter_id]
+        if entry.refcount <= 0:
+            raise RuntimeError(f"release() without acquire(): {adapter_id}")
+        entry.refcount -= 1
+
+    # ---- eviction / pinning ----------------------------------------------
+
+    def pin(self, adapter_id: str) -> None:
+        self._entries[adapter_id].pinned = True
+
+    def unpin(self, adapter_id: str) -> None:
+        self._entries[adapter_id].pinned = False
+
+    def evict(self, adapter_id: str) -> None:
+        entry = self._entries.get(adapter_id)
+        if entry is None:
+            return
+        if not entry.evictable:
+            raise RegistryFullError(
+                f"{adapter_id} is pinned or held by live requests")
+        del self._entries[adapter_id]
+        self.evictions += 1
+
+    def _evict_to_fit(self, exclude: str | None = None) -> None:
+        def over(n_entries, n_bytes):
+            if self.max_entries is not None and n_entries > self.max_entries:
+                return True
+            return self.capacity_bytes is not None and \
+                n_bytes > self.capacity_bytes
+
+        # Feasibility first (atomicity): would evicting *every* evictable
+        # entry suffice?  If not, raise before touching anything.
+        keep_n = sum(1 for k, v in self._entries.items()
+                     if not v.evictable or k == exclude)
+        keep_bytes = sum(v.nbytes for k, v in self._entries.items()
+                         if not v.evictable or k == exclude)
+        if over(keep_n, keep_bytes):
+            raise RegistryFullError(
+                "registry over capacity and every entry is pinned or "
+                "attached to a live request")
+
+        while over(len(self._entries), self.host_bytes):
+            victim = next(k for k, v in self._entries.items()
+                          if v.evictable and k != exclude)
+            del self._entries[victim]
+            self.evictions += 1
+
+    # ---- introspection ----------------------------------------------------
+
+    def __contains__(self, adapter_id: str) -> bool:
+        return adapter_id in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def ids(self) -> list[str]:
+        return list(self._entries)
+
+    def live_serials(self) -> set[int]:
+        """Serials of currently resident entries (engine stack-cache GC)."""
+        return {e.serial for e in self._entries.values()}
+
+    @property
+    def host_bytes(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())
+
+    def stats(self) -> dict:
+        return {"entries": len(self._entries),
+                "host_bytes": self.host_bytes,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "buckets": sorted({e.bucket
+                                   for e in self._entries.values()})}
+
+
+def _infer_rank(ad_tree: Any) -> int:
+    """Live rank = rank axis of any A leaf (uniform across modules)."""
+    if isinstance(ad_tree, dict):
+        if "A" in ad_tree:
+            return ad_tree["A"].shape[-2]
+        for v in ad_tree.values():
+            r = _infer_rank(v)
+            if r is not None:
+                return r
+        return None
+    return None

@@ -7,11 +7,16 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax
 import numpy as np
 import pytest
-from hypothesis import settings
 
-settings.register_profile("ci", max_examples=20, deadline=None,
-                          derandomize=True)
-settings.load_profile("ci")
+try:  # hypothesis is optional — see tests/_hyp.py
+    from hypothesis import settings
+except ModuleNotFoundError:
+    settings = None
+
+if settings is not None:
+    settings.register_profile("ci", max_examples=20, deadline=None,
+                              derandomize=True)
+    settings.load_profile("ci")
 
 
 @pytest.fixture(scope="session")

@@ -1,7 +1,7 @@
 """Client partitioning properties."""
 
 import numpy as np
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.federated.partition import (dirichlet_partition, iid_partition,
                                        label_histograms,

@@ -1,6 +1,6 @@
 """Layer-plan periodicity properties."""
 
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.models.plan import Plan, build_plan
 

@@ -1,7 +1,7 @@
 """MaskGen / FedArb / CommPru unit + property tests (paper §IV-B)."""
 
 import numpy as np
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.core import arbitration as ARB
 from repro.core import comm as COMM

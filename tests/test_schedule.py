@@ -1,7 +1,7 @@
 """Rank-budget schedule (paper Eq. 13) properties."""
 
 import numpy as np
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.core.schedule import budget_series, rank_budget
 

@@ -1,0 +1,355 @@
+"""Multi-tenant serving subsystem: registry LRU/pin eviction invariants,
+scheduler slot reuse, batched-kernel parity vs the sequential per-request
+reference, and engine-vs-unbatched output equality."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.bea_batched import bea_batched
+from repro.kernels.ops import adapted_dense_multi
+from repro.kernels.ref import bea_batched_ref
+from repro.models import Model
+from repro.serving import (AdapterRegistry, RegistryFullError, Scheduler,
+                           ServingEngine)
+from repro.serving.registry import bucket_for
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+def _tiny_adapters(rank, d=6, n=5, seed=0):
+    rng = np.random.default_rng(seed)
+    mod = {"A": jnp.asarray(rng.normal(size=(rank, d)), jnp.float32),
+           "B": jnp.asarray(rng.normal(size=(n, rank)), jnp.float32),
+           "E": jnp.asarray(rng.normal(size=(rank,)), jnp.float32)}
+    masks = {"dec": {"attn": {"wq": jnp.ones((rank,), jnp.bool_)}}}
+    return {"adapters": {"dec": {"attn": {"wq": mod}}}}, masks
+
+
+def test_registry_pads_to_bucket_and_folds_scaling():
+    reg = AdapterRegistry(serving_scaling=2.0, bucket_sizes=(4, 8))
+    tr, masks = _tiny_adapters(3)
+    e = reg.register("t", tr, masks, rank=3, scaling=4.0)
+    assert e.rank == 3 and e.bucket == 4
+    mod = e.adapters["dec"]["attn"]["wq"]
+    assert mod["A"].shape == (4, 6) and mod["B"].shape == (5, 4)
+    orig = tr["adapters"]["dec"]["attn"]["wq"]
+    np.testing.assert_allclose(np.asarray(mod["E"][:3]),
+                               np.asarray(orig["E"]) * 2.0)  # 4.0 / 2.0
+    assert not bool(mod["E"][3])                # padded rank zeroed
+    assert not bool(e.masks["dec"]["attn"]["wq"][3])   # …and masked off
+    assert bucket_for(9, (4, 8)) == 9           # past the largest bucket
+
+
+def test_registry_lru_evicts_least_recent_unpinned():
+    reg = AdapterRegistry(serving_scaling=1.0, bucket_sizes=(4,),
+                          max_entries=2)
+    for tid in ("a", "b"):
+        reg.register(tid, *_tiny_adapters(4), rank=4, scaling=1.0)
+    reg.get("a")                                 # b is now least recent
+    reg.register("c", *_tiny_adapters(4), rank=4, scaling=1.0)
+    assert reg.ids() == ["a", "c"]
+    assert reg.evictions == 1
+    with pytest.raises(KeyError):
+        reg.get("b")
+
+
+def test_registry_pinned_and_held_entries_survive():
+    reg = AdapterRegistry(serving_scaling=1.0, bucket_sizes=(4,),
+                          max_entries=2)
+    reg.register("pinned", *_tiny_adapters(4), rank=4, scaling=1.0, pin=True)
+    reg.register("held", *_tiny_adapters(4), rank=4, scaling=1.0)
+    reg.acquire("held")
+    # both protected → admitting a third must raise, not evict
+    with pytest.raises(RegistryFullError):
+        reg.register("c", *_tiny_adapters(4), rank=4, scaling=1.0)
+    reg.release("held")
+    reg.register("d", *_tiny_adapters(4), rank=4, scaling=1.0)
+    assert "pinned" in reg and "held" not in reg
+
+
+def test_registry_failed_reregister_is_atomic_and_keeps_pin():
+    reg = AdapterRegistry(serving_scaling=1.0, bucket_sizes=(4,),
+                          max_entries=2)
+    reg.register("a", *_tiny_adapters(4), rank=4, scaling=1.0, pin=True)
+    reg.register("x", *_tiny_adapters(4), rank=4, scaling=1.0, pin=True)
+    # both pinned → admitting a third must fail WITHOUT losing "x"
+    with pytest.raises(RegistryFullError):
+        reg.register("c", *_tiny_adapters(4), rank=4, scaling=1.0)
+    assert "x" in reg and reg.get("x").pinned
+    # re-register of a pinned adapter keeps the pin
+    e2 = reg.register("x", *_tiny_adapters(4, seed=1), rank=4, scaling=1.0)
+    assert e2.pinned
+    # a pinned (non-evictable) new entry must not be admitted on failure
+    with pytest.raises(RegistryFullError):
+        reg.register("p2", *_tiny_adapters(4), rank=4, scaling=1.0, pin=True)
+    assert "p2" not in reg and len(reg) == 2
+
+
+def test_registry_infeasible_admission_evicts_nothing():
+    """An entry too large to ever fit must not destroy unrelated entries."""
+    probe = AdapterRegistry(serving_scaling=1.0, bucket_sizes=(4, 16))
+    small = probe.register("s", *_tiny_adapters(4), rank=4, scaling=1.0)
+    reg = AdapterRegistry(serving_scaling=1.0, bucket_sizes=(4, 16),
+                          capacity_bytes=int(small.nbytes * 2.5))
+    reg.register("a", *_tiny_adapters(4), rank=4, scaling=1.0)
+    reg.register("b", *_tiny_adapters(4), rank=4, scaling=1.0)
+    big_tr, big_masks = _tiny_adapters(16, d=64, n=64)
+    with pytest.raises(RegistryFullError):
+        reg.register("big", big_tr, big_masks, rank=16, scaling=1.0)
+    assert reg.ids() == ["a", "b"]      # nothing was sacrificed
+
+
+def test_registry_capacity_bytes_eviction():
+    tr, masks = _tiny_adapters(4)
+    one = AdapterRegistry(serving_scaling=1.0, bucket_sizes=(4,))
+    e = one.register("x", tr, masks, rank=4, scaling=1.0)
+    reg = AdapterRegistry(serving_scaling=1.0, bucket_sizes=(4,),
+                          capacity_bytes=int(e.nbytes * 2.5))
+    for tid in ("a", "b", "c"):
+        reg.register(tid, *_tiny_adapters(4), rank=4, scaling=1.0)
+    assert len(reg) == 2 and reg.host_bytes <= reg.capacity_bytes
+    assert reg.ids() == ["b", "c"]
+
+
+# --------------------------------------------------------------------------
+# scheduler
+# --------------------------------------------------------------------------
+
+def test_scheduler_slots_never_shared_and_reclaimed():
+    sch = Scheduler(n_slots=3, max_seq=32)
+    reqs = [sch.submit("t", np.arange(4), 4) for _ in range(7)]
+    admitted = sch.admit()
+    assert len(admitted) == 3
+    slots = [r.slot for r in admitted]
+    assert len(set(slots)) == 3                 # no two live share a slot
+    assert sch.admit() == []                    # no free slots
+    sch.finish(admitted[1])
+    nxt = sch.admit()
+    assert len(nxt) == 1 and nxt[0].slot == slots[1]   # freed slot reclaimed
+    live = {r.slot for r in sch.running()}
+    assert len(live) == sch.n_running == 3
+    for r in sch.running():
+        sch.finish(r)
+    assert sch.n_free == 3 and sch.n_waiting == 3
+    assert reqs[0].state == "finished"
+
+
+def test_scheduler_rejects_oversized_prompts():
+    sch = Scheduler(n_slots=1, max_seq=8)
+    bad = sch.submit("t", np.arange(6), 4)      # 6 + 4 > 8
+    assert bad.state == "rejected" and sch.n_waiting == 0
+    assert sch.submit("t", np.arange(4), 0).state == "rejected"
+    assert sch.submit("t", np.arange(0), 2).state == "rejected"
+    ok = sch.submit("t", np.arange(4), 4)
+    assert ok.state == "waiting"
+
+
+def test_scheduler_defer_requeues_at_head():
+    sch = Scheduler(n_slots=2, max_seq=32)
+    a = sch.submit("t", np.arange(4), 2)
+    b = sch.submit("t", np.arange(4), 2)
+    first, second = sch.admit()
+    sch.defer(first)
+    assert first.state == "waiting" and sch.n_free == 1
+    assert sch.admit()[0] is first              # head of the queue
+
+
+def test_multi_defer_preserves_fifo(served):
+    """Two same-step deferrals must not invert submission order."""
+    cfg, model, base, tenants = served
+    eng = ServingEngine(model, base, n_slots=3, max_seq=24)
+    eng.registry.max_entries = 1
+    tr, masks, r = tenants["t4"]
+    eng.register_adapter("blocker", tr, masks, rank=r, pin=True)
+    loads = []
+    eng.registry.loader = lambda aid: (
+        loads.append(aid) or dict(trainable=tr, masks=masks, rank=r))
+    a = eng.submit("blocker", np.arange(4), 1)    # runs; holds the registry
+    b = eng.submit("t-early", np.arange(4), 1)
+    c = eng.submit("t-late", np.arange(4), 1)
+    eng.step()        # admits all three; b AND c defer (registry full)
+    eng.registry.max_entries = 3
+    eng.run()
+    assert loads[:2] == ["t-early", "t-late"]     # FIFO held across defers
+    assert all(x.state == "finished" for x in (a, b, c))
+
+
+# --------------------------------------------------------------------------
+# batched kernel parity
+# --------------------------------------------------------------------------
+
+def _batched_inputs(m, k, n, g, r, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)) / np.sqrt(k), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(g, r, k)) / np.sqrt(max(k, 1)),
+                    jnp.float32)
+    b = jnp.asarray(rng.normal(size=(g, n, r)), jnp.float32)
+    e = jnp.asarray(rng.normal(size=(g, r)), jnp.float32)
+    msk = jnp.asarray(rng.integers(0, 2, (g, r)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, g, (m,)), jnp.int32)
+    return x, w, a, b, e, msk, idx
+
+
+@pytest.mark.parametrize("m,k,n,g,r", [
+    (8, 16, 8, 2, 4), (33, 48, 65, 4, 8), (16, 64, 32, 1, 4),
+    (5, 24, 40, 6, 8), (12, 30, 20, 3, 4)])
+def test_bea_batched_matches_sequential_reference(m, k, n, g, r):
+    x, w, a, b, e, msk, idx = _batched_inputs(m, k, n, g, r, seed=m + r)
+    if g >= 2:
+        msk = msk.at[1].set(0.0)                # one fully-pruned adapter
+    got = bea_batched(x, w, a, b, e, msk, idx, scaling=1.5,
+                      block_m=32, block_n=32, block_k=32)
+    want = bea_batched_ref(x, w, a, b, e, msk, idx, 1.5)
+    assert float(jnp.abs(got - want).max()) <= 1e-5
+
+
+def test_bea_batched_rank_zero_bucket_is_dense():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(7, 24)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(24, 16)), jnp.float32)
+    got = bea_batched(x, w, jnp.zeros((2, 0, 24)), jnp.zeros((2, 16, 0)),
+                      jnp.zeros((2, 0)), jnp.zeros((2, 0)),
+                      jnp.zeros((7,), jnp.int32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_bea_batched_fully_pruned_rows_equal_dense():
+    x, w, a, b, e, msk, idx = _batched_inputs(9, 16, 12, 3, 4)
+    msk = msk.at[2].set(0.0)
+    idx = jnp.full((9,), 2, jnp.int32)          # every row → pruned adapter
+    got = bea_batched(x, w, a, b, e, msk, idx, scaling=3.0,
+                      block_m=32, block_n=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_adapted_dense_multi_paths_agree():
+    x, w, a, b, e, msk, idx = _batched_inputs(10, 20, 14, 3, 8, seed=7)
+    unfused = adapted_dense_multi(x, w, a, b, e, msk, idx, 1.3,
+                                  use_kernel=False)
+    fused = adapted_dense_multi(x, w, a, b, e, msk, idx, 1.3,
+                                use_kernel=True)
+    np.testing.assert_allclose(np.asarray(unfused), np.asarray(fused),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# engine end-to-end: batched == unbatched
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("qwen2_0p5b", smoke=True)
+    model = Model(cfg, peft="bea")
+    base, _ = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+
+    tenants = {}
+    for tid, r in [("t4", 4), ("t8", 8)]:
+        m_t = Model(cfg.with_(adapter_rank=r), peft="bea")
+        _, tr = m_t.init(jax.random.key(0))
+
+        def bump(tree):
+            if isinstance(tree, dict):
+                return {k: jnp.asarray(rng.normal(size=v.shape) * 0.05,
+                                       v.dtype) if k == "E" else bump(v)
+                        for k, v in tree.items()}
+            return tree
+
+        masks = m_t.init_masks()
+        masks = jax.tree.map(lambda m: m.at[..., -1].set(False), masks)
+        tenants[tid] = (bump(tr), masks, r)
+    return cfg, model, base, tenants
+
+
+def _spin_up(cfg, model, base, tenants, n_slots):
+    eng = ServingEngine(model, base, n_slots=n_slots, max_seq=24)
+    for tid, (tr, masks, r) in tenants.items():
+        eng.register_adapter(tid, tr, masks, rank=r, alpha=cfg.adapter_alpha)
+    return eng
+
+def test_engine_batched_equals_unbatched(served):
+    cfg, model, base, tenants = served
+    rng = np.random.default_rng(3)
+    plans = [("t4", rng.integers(0, cfg.vocab_size, 6)),
+             ("t8", rng.integers(0, cfg.vocab_size, 9)),
+             ("t4", rng.integers(0, cfg.vocab_size, 8)),
+             ("t8", rng.integers(0, cfg.vocab_size, 5))]
+
+    eng = _spin_up(cfg, model, base, tenants, n_slots=3)   # 4 reqs, 3 slots
+    reqs = [eng.submit(tid, p, 3) for tid, p in plans]
+    eng.run()
+    assert all(r.state == "finished" and len(r.out) == 3 for r in reqs)
+
+    for req, (tid, prompt) in zip(reqs, plans):
+        solo = _spin_up(cfg, model, base, tenants, n_slots=1)
+        sr = solo.submit(tid, prompt, 3)
+        solo.run()
+        assert sr.out == req.out, f"rid={req.rid} {sr.out} != {req.out}"
+
+
+def test_engine_matches_native_rank_model_replay(served):
+    """The padded/scaling-folded registry form must reproduce the tenant's
+    native-rank model exactly (greedy tokens)."""
+    cfg, model, base, tenants = served
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, 7)
+
+    eng = _spin_up(cfg, model, base, tenants, n_slots=1)
+    req = eng.submit("t8", prompt, 3)
+    eng.run()
+
+    tr, masks, r = tenants["t8"]
+    m_t = Model(cfg.with_(adapter_rank=r), peft="bea")
+    cache = jax.tree.map(lambda m: jnp.zeros(m.shape, m.dtype),
+                         m_t.cache_meta(1, 24),
+                         is_leaf=lambda x: hasattr(x, "init"))
+    logits, cache = m_t.prefill(base, tr, masks,
+                                {"tokens": jnp.asarray(prompt)[None]}, cache)
+    toks = [int(jnp.argmax(logits[0]))]
+    for _ in range(2):
+        logits, cache = m_t.decode_step(
+            base, tr, masks, jnp.asarray([[toks[-1]]], jnp.int32), cache)
+        toks.append(int(jnp.argmax(logits[0])))
+    assert toks == req.out
+
+
+def test_engine_run_aborts_on_wedged_registry(served):
+    """All adapters pinned + registry full + waiting requests → run() must
+    raise instead of spinning forever."""
+    cfg, model, base, tenants = served
+    eng = ServingEngine(model, base, n_slots=2, max_seq=24)
+    eng.registry.max_entries = 1
+    tr, masks, r = tenants["t4"]
+    eng.register_adapter("pinned", tr, masks, rank=r, pin=True)
+
+    def loader(aid):          # forces a register() into the full registry
+        return dict(trainable=tr, masks=masks, rank=r)
+
+    eng.registry.loader = loader
+    for _ in range(3):        # more waiting requests than slots
+        eng.submit("other", np.arange(4), 2)
+    with pytest.raises(RegistryFullError):
+        eng.run()
+
+
+def test_engine_continuous_batching_reuses_slots(served):
+    cfg, model, base, tenants = served
+    rng = np.random.default_rng(9)
+    eng = _spin_up(cfg, model, base, tenants, n_slots=2)
+    reqs = [eng.submit(["t4", "t8"][i % 2],
+                       rng.integers(0, cfg.vocab_size, 5), 2)
+            for i in range(5)]
+    eng.run()
+    assert all(r.state == "finished" for r in reqs)
+    assert eng.scheduler.n_free == 2
+    # 5 requests through 2 slots → at least three admission waves
+    starts = sorted(r.start_step for r in reqs)
+    assert starts[0] < starts[2] < starts[4]
