@@ -1,0 +1,136 @@
+"""fedsim benchmark: cohort-vs-sequential round throughput, quantized
+transport byte ratios, and async event throughput.
+
+The throughput comparison runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the shard_map cohort
+axis needs >1 device; CPU-only hosts fake them) and measures *steady-state*
+seconds/round by differencing a long and a short run — jit compile time
+cancels.  Clients are IID-partitioned so every cohort slot carries real work
+(dirichlet skew creates sub-batch clients that fall back to the sequential
+path and padded slots that waste cohort compute — that regime is the
+round-robin fallback's job, not this benchmark's).
+
+Emits CSV rows through benchmarks/common.py and BENCH_fedsim.json
+(override with BENCH_FEDSIM_JSON).
+
+  PYTHONPATH=src BENCH_ONLY=fedsim python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks import common as C
+
+JSON_PATH = os.environ.get("BENCH_FEDSIM_JSON", "BENCH_fedsim.json")
+N_HOST_DEVICES = int(os.environ.get("BENCH_FEDSIM_DEVICES", "2"))
+
+_SUB = textwrap.dedent("""
+    import os, sys, json, time
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=%(ndev)d")
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax
+    from repro.configs.distilbert import MINI
+    from repro.data.synthetic import make_classification
+    from repro.federated.baselines import all_strategies
+    from repro.federated.partition import iid_partition
+    from repro.federated.server import FedConfig, run_federated
+    from repro.models import Model
+
+    quick = %(quick)r
+    cfg = MINI.with_(n_layers=2, layer_pattern=("attn",) * 2)
+    train = make_classification(1600, 20, cfg.vocab_size, 32, seed=1)
+    test = make_classification(200, 20, cfg.vocab_size, 32, seed=2)
+    parts = iid_partition(train.labels, 20, seed=0)
+
+    def timed(runner, rounds, cpr, codec="identity"):
+        strat = all_strategies(rounds=rounds)["fedlora"]
+        model = Model(cfg, peft=strat.peft, unroll=True)
+        fc = FedConfig(rounds=rounds, clients_per_round=cpr, batch_size=16,
+                       max_local_batches=4, eval_every=10**6, lr=3e-3,
+                       runner=runner, codec=codec)
+        t0 = time.perf_counter()
+        h = run_federated(model, strat, parts, train, test, fc)
+        return time.perf_counter() - t0, h
+
+    out = {"ndev": len(jax.devices()), "rows": []}
+    r_short, r_long = (1, 3) if quick else (2, 6)
+    for cpr in ([4] if quick else [2, 4, 8]):
+        rec = {"cpr": cpr}
+        for runner in ("seq", "cohort"):
+            ts, _ = timed(runner, r_short, cpr)
+            tl, _ = timed(runner, r_long, cpr)
+            rec[runner + "_round_s"] = (tl - ts) / (r_long - r_short)
+        # a non-positive difference is compile/scheduler noise, not a
+        # measurement — report NaN rather than a fabricated ratio
+        noisy = rec["seq_round_s"] <= 0 or rec["cohort_round_s"] <= 0
+        rec["noisy"] = noisy
+        rec["speedup"] = (float("nan") if noisy
+                          else rec["seq_round_s"] / rec["cohort_round_s"])
+        out["rows"].append(rec)
+
+    # transport: bytes per round under each codec (cohort runner)
+    out["codec"] = {}
+    for codec in ("identity", "int8", "topk"):
+        _, h = timed("cohort", r_short, 4, codec)
+        out["codec"][codec] = h["comm_gb"] * 1e9 / r_short
+
+    # async: simulated time + events per aggregation round
+    strat = all_strategies(rounds=r_long)["fedlora"]
+    model = Model(cfg, peft=strat.peft, unroll=True)
+    fc = FedConfig(rounds=r_long, clients_per_round=4, batch_size=16,
+                   max_local_batches=4, eval_every=10**6, lr=3e-3,
+                   runner="async", buffer_k=4, straggler=0.25)
+    t0 = time.perf_counter()
+    h = run_federated(model, strat, parts, train, test, fc)
+    out["async"] = {"wall_s": time.perf_counter() - t0,
+                    "sim_time_s": h["sim_time_s"],
+                    "events": len(h["events"]),
+                    "mean_staleness": sum(l.staleness for l in h["rounds"])
+                    / max(len(h["rounds"]), 1)}
+    print("FEDSIM_JSON=" + json.dumps(out))
+""")
+
+
+def main(quick: bool = False) -> None:
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    script = _SUB % {"ndev": N_HOST_DEVICES, "quick": bool(quick or C.QUICK)}
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=3000)
+    marker = "FEDSIM_JSON="
+    line = next((ln for ln in r.stdout.splitlines()
+                 if ln.startswith(marker)), None)
+    if r.returncode != 0 or line is None:
+        sys.stderr.write(r.stdout[-2000:] + r.stderr[-4000:])
+        raise RuntimeError("fedsim subprocess failed")
+    out = json.loads(line[len(marker):])
+
+    rows = []
+    for rec in out["rows"]:
+        rows.append(C.row(f"fedsim/cohort_speedup_cpr{rec['cpr']}",
+                          f"{rec['speedup']:.3f}",
+                          seq_s=f"{rec['seq_round_s']:.3f}",
+                          cohort_s=f"{rec['cohort_round_s']:.3f}",
+                          ndev=out["ndev"], noisy=int(rec["noisy"])))
+    ident = out["codec"]["identity"]
+    for name, b in out["codec"].items():
+        rows.append(C.row(f"fedsim/codec_{name}_bytes_per_round",
+                          int(b), ratio=f"{ident / max(b, 1):.2f}"))
+    a = out["async"]
+    rows.append(C.row("fedsim/async_sim_time_s", f"{a['sim_time_s']:.1f}",
+                      events=a["events"],
+                      mean_staleness=f"{a['mean_staleness']:.2f}"))
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+    rows.append(C.row("fedsim/json", JSON_PATH, ndev=out["ndev"]))
+    C.emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -89,9 +89,8 @@ def run(name: str, ds: str = "syn20news", dist: str = "dir0.1",
     parts = partitions(train, dist, seed)
     model = Model(cfg, peft=strat.peft, unroll=True)
     fc = fc or fed_config(rounds=rounds, seed=seed)
-    t0 = time.time()
     h = run_federated(model, strat, parts, train, test, fc)
-    h["wall_s"] = time.time() - t0
+    # run_federated stamps wall_s itself (perf_counter + block_until_ready)
     h["strategy"] = strat
     h["fc"] = fc
     return h

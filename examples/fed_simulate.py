@@ -1,0 +1,69 @@
+"""fedsim walkthrough: one FedARA scenario through all three runners plus a
+quantized-transport comparison — the device-parallel simulation engine in
+~80 lines.
+
+  PYTHONPATH=src python examples/fed_simulate.py
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python examples/fed_simulate.py   # shard the cohort axis
+"""
+
+import jax
+import numpy as np
+
+from repro.configs.distilbert import MINI
+from repro.data.synthetic import make_classification
+from repro.federated.baselines import all_strategies
+from repro.federated.partition import dirichlet_partition
+from repro.federated.server import FedConfig, run_federated
+from repro.models import Model
+
+ROUNDS, CPR = 4, 4
+
+cfg = MINI.with_(n_layers=2, layer_pattern=("attn",) * 2)
+train = make_classification(800, 20, cfg.vocab_size, 32, seed=1)
+test = make_classification(200, 20, cfg.vocab_size, 32, seed=2)
+parts = dirichlet_partition(train.labels, 12, alpha=0.3, seed=0)
+print(f"devices: {len(jax.devices())}  clients: {len(parts)}  "
+      f"sizes: {[len(p) for p in parts]}")
+
+
+def go(**kw):
+    strat = all_strategies(rounds=ROUNDS)["fedara"]
+    strat.total_rounds, strat.warmup_rounds = ROUNDS, 1
+    model = Model(cfg, peft=strat.peft, unroll=True)
+    fc = FedConfig(rounds=ROUNDS, clients_per_round=CPR, batch_size=16,
+                   max_local_batches=3, eval_every=ROUNDS, lr=3e-3, **kw)
+    return run_federated(model, strat, parts, train, test, fc)
+
+
+# 1. The sequential oracle vs the one-dispatch-per-round cohort runner:
+#    identical selection/batch RNG streams → same losses, masks, bytes.
+h_seq = go(runner="seq")
+h_coh = go(runner="cohort")
+for a, b in zip(h_seq["rounds"], h_coh["rounds"]):
+    print(f"round {a.rnd}: loss seq {a.loss:.5f} / cohort {b.loss:.5f}  "
+          f"live_ranks {a.live_ranks}/{b.live_ranks}  "
+          f"MB {(a.down_bytes + a.up_bytes) / 1e6:.2f}"
+          f"/{(b.down_bytes + b.up_bytes) / 1e6:.2f}")
+print(f"wall: seq {h_seq['wall_s']:.1f}s  cohort {h_coh['wall_s']:.1f}s  "
+      f"(cohort simulated round clock: {h_coh['sim_time_s']:.0f}s)")
+
+# 2. Quantized transport: int8 blockwise + error feedback ≈ 4× fewer bytes,
+#    top-k (10%: values + indices) ≈ 5×, at (near) parity in loss.
+for codec in ("identity", "int8", "topk"):
+    h = go(runner="cohort", codec=codec)
+    print(f"codec {codec:9s} total {h['comm_gb'] * 1e3:7.2f} MB  "
+          f"final loss {h['rounds'][-1].loss:.4f}")
+
+# 3. FedBuff-style async: buffered staleness-weighted aggregation under
+#    stragglers and dropout, on a deterministic simulated event clock.
+h = go(runner="async", buffer_k=CPR, straggler=0.3, dropout=0.1,
+       event_seed=7)
+for log in h["rounds"]:
+    print(f"agg {log.rnd}: loss {log.loss:.4f}  "
+          f"staleness {log.staleness:.2f}  t={log.sim_time_s:.0f}s")
+print(f"async: {len(h['events'])} events, "
+      f"sim_time {h['sim_time_s']:.0f}s, final acc {h['final_acc']:.4f}")
+
+assert np.isfinite(h["final_acc"])
+print("OK")

@@ -7,6 +7,13 @@ Masks travel as booleans (1 bit each) and are negligible, but are counted.
 Pack/unpack provide an actual wire format (used by the round-trip property
 tests); the federated simulator uses ``prune_tree`` (zero masked ranks —
 semantics-preserving because masked ranks are frozen and contribute nothing).
+
+CommPru decides *which* parameters travel; ``repro.fedsim.transport`` layers
+the *how* on top of this wire format — pluggable codecs (blockwise int8,
+top-k) with error feedback, plus bandwidth/latency links.  ``pack_int8``
+below stays as the simple per-tensor variant the paper's §VIII table quotes;
+simulation runs should prefer ``fedsim.transport.Int8Block`` (per-block
+scales + residual memory).
 """
 
 from __future__ import annotations

@@ -1,1 +1,2 @@
-from repro.federated.server import FedConfig, run_federated  # noqa: F401
+from repro.federated.server import (FedConfig, RoundLog, evaluate,  # noqa: F401
+                                    fedavg, run_federated)

@@ -1,9 +1,14 @@
 """Federated server loop (paper Algorithm 1), strategy-agnostic.
 
 Implements: client selection → CommPru'd broadcast → parallel local training
-(emulated sequentially, shared jit) → FedAvg aggregation → FedArb mask
-arbitration → RankDet module gating — with byte-exact communication
-accounting per round.
+→ FedAvg aggregation → FedArb mask arbitration → RankDet module gating — with
+byte-exact communication accounting per round.
+
+The sequential per-client loop below (``runner="seq"``) is the parity oracle.
+``FedConfig.runner`` routes the same run through ``repro.fedsim``:
+``"cohort"`` executes each round's local phase as one vmap+scan+shard_map
+dispatch, ``"async"`` runs FedBuff-style buffered aggregation on a simulated
+event clock (see fedsim/runner.py).
 """
 
 from __future__ import annotations
@@ -22,6 +27,7 @@ from repro.core import masks as MK
 from repro.core import pruning as PR
 from repro.data.synthetic import Dataset, batches
 from repro.federated import client as CL
+from repro.fedsim.cohort import client_batch_rng
 
 
 @dataclasses.dataclass
@@ -37,6 +43,17 @@ class FedConfig:
     eval_every: int = 5
     max_local_batches: int = 8          # caps emulation cost per client
     eval_batches: int = 16
+    # ---- fedsim (device-parallel simulation / transport / async) ----------
+    runner: str = "seq"                 # seq | cohort | async
+    codec: str = "identity"             # identity | int8 | topk
+    dropout: float = 0.0                # P(selected client never reports)
+    straggler: float = 0.0              # P(client is a straggler this round)
+    straggler_slow: float = 4.0         # straggler compute-time multiplier
+    buffer_k: int = 0                   # async: aggregate every K arrivals
+    async_concurrency: int = 0          # async: in-flight clients (0 → 2K)
+    staleness_alpha: float = 0.5        # async: weight = n·(1+s)^-alpha
+    event_seed: int = 0                 # dropout/straggler/event-time stream
+    device_profile: str = "distilbert"  # federated/devices.py compute profile
 
 
 @dataclasses.dataclass
@@ -49,6 +66,8 @@ class RoundLog:
     trainable_params: int
     loss: float
     acc: float = float("nan")
+    sim_time_s: float = 0.0             # simulated wall clock (fedsim runners)
+    staleness: float = 0.0              # mean update staleness (async runner)
 
 
 def fedavg(trees: list[Any], weights: list[float]) -> Any:
@@ -65,77 +84,124 @@ def fedavg(trees: list[Any], weights: list[float]) -> Any:
 
 
 def evaluate(model, base, trainable, masks, test: Dataset, fc: FedConfig):
+    """cls → accuracy over the eval batches; lm → mean per-token NLL (the
+    eval step returns a batch-mean NLL for lm; next-token targets are
+    derived from the dataset's token stream)."""
     ev = CL.make_eval_step(model, fc.task)
     rng = np.random.default_rng(0)
-    correct, total = 0.0, 0
+    correct, total, nlls = 0.0, 0, []
     for i, batch in enumerate(batches(test, fc.batch_size, rng)):
         if i >= fc.eval_batches:
             break
-        jb = {k: jnp.asarray(v) for k, v in batch.items()}
-        correct += float(ev(base, trainable, masks, jb))
-        total += len(batch["labels"])
-    return correct / max(total, 1)
+        if fc.task == "cls":
+            jb = {k: jnp.asarray(v) for k, v in batch.items()}
+            correct += float(ev(base, trainable, masks, jb))
+            total += len(batch["labels"])
+        else:
+            toks = jnp.asarray(batch["tokens"])
+            jb = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+            nlls.append(float(ev(base, trainable, masks, jb)))
+    if fc.task == "cls":
+        return correct / max(total, 1)
+    return float(np.mean(nlls)) if nlls else float("nan")
 
 
-def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
-                  test: Dataset, fc: FedConfig,
-                  on_round: Callable | None = None) -> dict:
-    """Returns history dict with per-round logs and final accuracy."""
+# ---------------------------------------------------------------------------
+# Shared round machinery (used by the oracle below and by fedsim/runner.py)
+# ---------------------------------------------------------------------------
+
+def _init_run(model, strategy, fc: FedConfig):
+    """Common run state: init params, masks, optimizer, selection stream."""
     key = jax.random.key(fc.seed)
     base, trainable = model.init(key)
     base, trainable = strategy.post_init(model, base, trainable, key)
     masks = model.init_masks() if strategy.uses_masks() else None
     masks_np = MK.jax_to_np(masks) if masks else None
     n_rank_units = MK.total_ranks(masks_np) if masks_np else 0
-
     total_steps = fc.rounds * fc.max_local_batches * fc.local_epochs
     opt = OPT.adam(OPT.linear_decay(fc.lr, total_steps))
-    step_fn = CL.make_train_step(model, opt, fc.task)
     rng = np.random.default_rng(fc.seed)
+    return base, trainable, masks, masks_np, n_rank_units, opt, rng
+
+
+def _arbitrate(strategy, trainable, local_masks, masks, masks_np, rnd):
+    """FedArb + RankDet after aggregation → (trainable, masks, masks_np)."""
+    if strategy.uses_masks():
+        strategy.last_aggregate = trainable   # FedARA-global ablation hook
+        masks_np = strategy.arbitrate(rnd, local_masks, masks_np)
+        masks = jax.tree.map(jnp.asarray, masks_np)
+        trainable = dict(trainable,
+                         adapters=COMM.prune_tree(trainable["adapters"],
+                                                  masks_np))
+    return trainable, masks, masks_np
+
+
+def _run_stage1(model, strategy, base, trainable, parts, train, fc, opt, rng,
+                logs, history):
+    """SLoRA stage 1: sparse full-FT rounds before LoRA (baselines.SLoRA).
+    Consumes ``rng`` selections exactly like main rounds, so runners that
+    share the selection stream stay aligned with the oracle."""
+    s1_rounds = strategy.stage1_rounds(fc.rounds)
+    masks = model.init_masks() if strategy.uses_masks() else None
+    base0 = base
+    s1_gate = strategy.sparse_gate(base, fc.seed)
+    s1_step = CL.make_train_step(model, opt, fc.task, train_base=True)
+    s1_update = CL.make_base_update_step(opt)
+    for rnd in range(s1_rounds):
+        sel = rng.choice(len(parts), size=min(fc.clients_per_round,
+                                              len(parts)), replace=False)
+        deltas, sizes = [], []
+        comm = strategy.stage1_comm_bytes(base) * len(sel) * 2
+        for cid in sel:
+            idx = parts[cid]
+            cd = Dataset(train.tokens[idx], train.labels[idx])
+            bk, opt_b = base, opt.init(base)
+            opt_t, params_k = opt.init(trainable), trainable
+            gen = _take(batches(cd, fc.batch_size,
+                                client_batch_rng(fc.seed, rnd, cid)),
+                        fc.max_local_batches)
+            for bt in gen:
+                jb = {k: jnp.asarray(v) for k, v in bt.items()}
+                params_k, opt_t, _, gb, _, _ = s1_step(
+                    bk, params_k, opt_t, masks, None, jb)
+                bk, opt_b = s1_update(bk, opt_b, gb, s1_gate)
+            deltas.append(jax.tree.map(lambda a, b: a - b, bk, base))
+            sizes.append(len(idx))
+        davg = fedavg(deltas, sizes)
+        base = jax.tree.map(lambda b, d: b + d, base, davg)
+        logs.append(RoundLog(rnd, comm // 2, comm // 2,
+                             live_ranks=0, dead_modules=0,
+                             trainable_params=PR.count_trainable(base),
+                             loss=float("nan")))
+        history["comm_gb"] += comm / 1e9
+    # convert the sparse delta into the LoRA init, reset the base
+    trainable = strategy.svd_init_from_delta(model, base0, base, trainable)
+    return base0, trainable
+
+
+def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
+                  test: Dataset, fc: FedConfig,
+                  on_round: Callable | None = None) -> dict:
+    """Returns history dict with per-round logs and final accuracy."""
+    if fc.runner != "seq":
+        from repro.fedsim import runner as FR   # lazy: fedsim imports us back
+        return FR.run(model, strategy, parts, train, test, fc, on_round)
+
+    base, trainable, masks, masks_np, n_rank_units, opt, rng = \
+        _init_run(model, strategy, fc)
+    step_fn = CL.make_train_step(model, opt, fc.task)
 
     logs: list[RoundLog] = []
     history = {"rounds": logs, "acc": [], "comm_gb": 0.0}
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     # SLoRA stage 1: sparse full-FT rounds before LoRA (baselines.SLoRA)
     s1_rounds = (strategy.stage1_rounds(fc.rounds)
                  if hasattr(strategy, "stage1_rounds") else 0)
     if s1_rounds:
-        base0 = base
-        s1_gate = strategy.sparse_gate(base, fc.seed)
-        s1_step = CL.make_train_step(model, opt, fc.task, train_base=True)
-        s1_update = CL.make_base_update_step(opt)
-        for rnd in range(s1_rounds):
-            sel = rng.choice(len(parts), size=min(fc.clients_per_round,
-                                                  len(parts)), replace=False)
-            deltas, sizes = [], []
-            comm = strategy.stage1_comm_bytes(base) * len(sel) * 2
-            for cid in sel:
-                idx = parts[cid]
-                cd = Dataset(train.tokens[idx], train.labels[idx])
-                bk, opt_b = base, opt.init(base)
-                opt_t, params_k = opt.init(trainable), trainable
-                gen = _take(batches(cd, fc.batch_size,
-                                    np.random.default_rng(cid + rnd * 97)),
-                            fc.max_local_batches)
-                for bt in gen:
-                    jb = {k: jnp.asarray(v) for k, v in bt.items()}
-                    params_k, opt_t, _, gb, _, _ = s1_step(
-                        bk, params_k, opt_t, masks, None, jb)
-                    bk, opt_b = s1_update(bk, opt_b, gb, s1_gate)
-                deltas.append(jax.tree.map(lambda a, b: a - b, bk, base))
-                sizes.append(len(idx))
-            davg = fedavg(deltas, sizes)
-            base = jax.tree.map(lambda b, d: b + d, base, davg)
-            logs.append(RoundLog(rnd, comm // 2, comm // 2,
-                                 live_ranks=0, dead_modules=0,
-                                 trainable_params=PR.count_trainable(base),
-                                 loss=float("nan")))
-            history["comm_gb"] += comm / 1e9
-        # convert the sparse delta into the LoRA init, reset the base
-        trainable = strategy.svd_init_from_delta(model, base0, base,
-                                                 trainable)
-        base = base0
+        base, trainable = _run_stage1(model, strategy, base, trainable,
+                                      parts, train, fc, opt, rng, logs,
+                                      history)
 
     for rnd in range(s1_rounds, fc.rounds):
         sel = rng.choice(len(parts), size=min(fc.clients_per_round,
@@ -153,7 +219,7 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
             idx = parts[cid]
             client_data = Dataset(train.tokens[idx], train.labels[idx])
             gen = batches(client_data, fc.batch_size,
-                          np.random.default_rng(fc.seed * 1000 + rnd * 97 + cid),
+                          client_batch_rng(fc.seed, rnd, cid),
                           epochs=fc.local_epochs)
             gen = _take(gen, fc.max_local_batches * fc.local_epochs)
             params_k, grads_k, m = CL.local_train(
@@ -170,14 +236,9 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
         # ---- FedAvg ------------------------------------------------------
         trainable = fedavg([r[0] for r in results],
                            [r[1] for r in results])
-        # ---- FedArb + RankDet ---------------------------------------------
-        if strategy.uses_masks():
-            strategy.last_aggregate = trainable   # FedARA-global ablation hook
-            masks_np = strategy.arbitrate(rnd, local_masks, masks_np)
-            masks = jax.tree.map(jnp.asarray, masks_np)
-            trainable = dict(trainable,
-                             adapters=COMM.prune_tree(trainable["adapters"],
-                                                      masks_np))
+        # ---- FedArb + RankDet -------------------------------------------
+        trainable, masks, masks_np = _arbitrate(
+            strategy, trainable, local_masks, masks, masks_np, rnd)
         live = int(MK.count_true(masks_np)) if masks_np else n_rank_units
         n_dead = (len(PR.dead_modules(masks_np)) if masks_np else 0)
         tp = PR.count_trainable(trainable)
@@ -193,7 +254,8 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
             on_round(rnd, log)
 
     history["final_acc"] = logs[-1].acc
-    history["wall_s"] = time.time() - t0
+    jax.block_until_ready(trainable)            # stop the clock honestly
+    history["wall_s"] = time.perf_counter() - t0
     history["base"] = base
     history["trainable"] = trainable
     history["masks"] = masks_np

@@ -1,0 +1,382 @@
+"""Event-driven federated round runner (fedsim pillar 3).
+
+Two execution modes behind ``FedConfig.runner`` (the sequential oracle stays
+in federated/server.py):
+
+  cohort  barrier-synchronous rounds whose local phase is ONE
+          vmap+scan+shard_map dispatch (fedsim/cohort.py) with on-device psum
+          FedAvg; dropout/straggler injection and a simulated wall clock from
+          the per-device-class transport links.
+  async   FedBuff-style buffered aggregation [Nguyen et al. 2022]: clients
+          train against the global version they were dispatched with; the
+          server aggregates every K arrivals with size·(1+staleness)^-α
+          weights on the accumulated deltas.
+
+Every randomness source is seeded — selection from ``fc.seed`` (the oracle's
+stream), event times / dropout / stragglers from ``fc.event_seed`` — so one
+(seed, event_seed) pair reproduces the identical history and event log.
+Quantized transport (``fc.codec``) routes every byte through
+fedsim/transport.py codecs with per-endpoint error feedback.
+"""
+
+from __future__ import annotations
+
+import heapq
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks as MK
+from repro.core import pruning as PR
+from repro.core import comm as COMM
+from repro.data.synthetic import Dataset, batches
+from repro.federated import client as CL
+from repro.federated import devices as DV
+from repro.federated import server as SV
+from repro.fedsim import cohort as CH
+from repro.fedsim import transport as T
+
+_MIX = ("rpi5", "orin_nano", "agx_orin")
+
+
+def device_of(cid: int) -> str:
+    return _MIX[int(cid) % len(_MIX)]
+
+
+def _compute_s(cid: int, fc, n_batches: int, slow: float = 1.0) -> float:
+    prof = DV.PROFILES[device_of(cid)]
+    per_batch = prof.get(fc.device_profile, next(iter(prof.values())))
+    return per_batch * n_batches * slow
+
+
+def _event_rng(fc) -> np.random.Generator:
+    return np.random.default_rng([fc.event_seed, fc.seed])
+
+
+def _cast_like(dec, like):
+    return jax.tree.map(lambda d, x: jnp.asarray(d, x.dtype), dec, like)
+
+
+def _n_local_batches(n: int, fc) -> int:
+    """Exact per-client local step count (mirrors data.synthetic.batches)."""
+    per_epoch = n // fc.batch_size if n >= fc.batch_size else 1
+    return min(fc.max_local_batches * fc.local_epochs,
+               per_epoch * fc.local_epochs)
+
+
+def run(model, strategy, parts, train, test, fc,
+        on_round: Callable | None = None) -> dict:
+    if fc.runner == "async":
+        return run_async(model, strategy, parts, train, test, fc, on_round)
+    if fc.runner == "cohort":
+        return run_cohort(model, strategy, parts, train, test, fc, on_round)
+    raise ValueError(f"unknown runner {fc.runner!r} (seq|cohort|async)")
+
+
+# ---------------------------------------------------------------------------
+# cohort: barrier-sync rounds, one dispatch per round
+# ---------------------------------------------------------------------------
+
+def run_cohort(model, strategy, parts, train, test, fc,
+               on_round: Callable | None = None) -> dict:
+    base, trainable, masks, masks_np, n_rank_units, opt, rng = \
+        SV._init_run(model, strategy, fc)
+    step_fn = CL.make_train_step(model, opt, fc.task)     # ragged fallback
+    cohort_fn = CH.make_cohort_fn(model, opt, fc.task)
+    ndev = len(jax.devices())
+    cpr = min(fc.clients_per_round, len(parts))
+    c_pad = -(-cpr // ndev) * ndev                        # shardable cohort
+
+    codec = None if fc.codec == "identity" else T.make_codec(fc.codec)
+    ef_up = T.ErrorFeedback(codec) if codec else None
+    ef_down = T.ErrorFeedback(codec) if codec else None
+    ev_rng = _event_rng(fc)
+
+    logs: list[SV.RoundLog] = []
+    history = {"rounds": logs, "acc": [], "comm_gb": 0.0, "sim_time_s": 0.0}
+    t0 = time.perf_counter()
+
+    s1_rounds = (strategy.stage1_rounds(fc.rounds)
+                 if hasattr(strategy, "stage1_rounds") else 0)
+    if s1_rounds:
+        base, trainable = SV._run_stage1(model, strategy, base, trainable,
+                                         parts, train, fc, opt, rng, logs,
+                                         history)
+
+    for rnd in range(s1_rounds, fc.rounds):
+        sel = rng.choice(len(parts), size=cpr, replace=False)
+        # ---- CommPru'd broadcast (codec'd when lossy transport is on) ----
+        if masks_np is not None:
+            trainable = dict(trainable,
+                             adapters=COMM.prune_tree(trainable["adapters"],
+                                                      masks_np))
+        if codec:
+            wire = T.flatten_update(trainable, masks_np)
+            dec, nb = ef_down.roundtrip("down", wire)
+            bc = _cast_like(T.unflatten_update(dec, trainable, masks_np),
+                            trainable)
+            down_per = nb + T.mask_wire_bytes(masks_np)
+        else:
+            bc = trainable
+            down_per = strategy.comm_down(trainable, masks_np)
+        down = down_per * len(sel)
+        gate = strategy.optimizer_gate(bc, masks_np)
+
+        # ---- dropout / straggler draws (fixed order → determinism) ------
+        drops = ev_rng.random(len(sel)) < fc.dropout
+        slows = np.where(ev_rng.random(len(sel)) < fc.straggler,
+                         fc.straggler_slow, 1.0)
+        active = [int(c) for c, d in zip(sel, drops) if not d]
+
+        # ---- local phase: one dispatch for the whole cohort --------------
+        cohort = CH.build_cohort(train, parts, active, fc, rnd, c_pad)
+        pc = gc = lc = mc = avg = None
+        cohort_idx = {}
+        if cohort is not None:
+            stacked = CH.stack_params(bc, len(cohort.weights))
+            pc, gc, lc, mc, avg = cohort_fn(
+                base, stacked, masks, gate, cohort.batches,
+                cohort.step_mask, cohort.weights)
+            lc, mc = np.asarray(lc, np.float32), np.asarray(mc, np.float32)
+            cohort_idx = {cid: i for i, cid in enumerate(cohort.cids)}
+
+        results, local_masks, up = [], [], 0
+        up_sizes, steps_of = {}, {}
+        for cid in active:
+            if cid in cohort_idx:
+                i = cohort_idx[cid]
+                sm = cohort.step_mask[i]
+                params_k = CH.slice_client(pc, i)
+                grads_k = CH.slice_client(gc, i)
+                m = {"loss": float(np.mean(lc[i][sm])) if sm.any()
+                     else float("nan"),
+                     "metric": float(np.mean(mc[i][sm])) if sm.any()
+                     else float("nan"),
+                     "n_batches": int(cohort.n_steps[i])}
+                w = float(cohort.weights[i])
+            else:                                   # ragged client → oracle
+                idx = parts[cid]
+                gen = SV._take(
+                    batches(Dataset(train.tokens[idx], train.labels[idx]),
+                            fc.batch_size,
+                            CH.client_batch_rng(fc.seed, rnd, cid),
+                            epochs=fc.local_epochs),
+                    fc.max_local_batches * fc.local_epochs)
+                params_k, grads_k, m = CL.local_train(
+                    step_fn, base, bc, masks, gate, opt, gen)
+                w = float(len(parts[cid]))
+            if strategy.uses_masks():
+                local_masks.append(strategy.local_masks(
+                    rnd, params_k["adapters"],
+                    (grads_k or {}).get("adapters"), n_rank_units))
+            if codec:
+                wire = T.flatten_update(params_k, masks_np)
+                dec, nb = ef_up.roundtrip(cid, wire)
+                params_k = _cast_like(
+                    T.unflatten_update(dec, params_k, masks_np), params_k)
+                up_sizes[cid] = nb + T.mask_wire_bytes(masks_np)
+            else:
+                up_sizes[cid] = strategy.comm_up(params_k, masks_np)
+            up += up_sizes[cid]
+            steps_of[cid] = m["n_batches"]
+            results.append((params_k, w, m))
+
+        # ---- FedAvg: on-device psum unless a client took a side path -----
+        if results:
+            if codec is None and cohort is not None and not cohort.fallback:
+                trainable = avg
+            else:
+                trainable = SV.fedavg([r[0] for r in results],
+                                      [r[1] for r in results])
+            trainable, masks, masks_np = SV._arbitrate(
+                strategy, trainable, local_masks, masks, masks_np, rnd)
+
+        # ---- simulated wall clock (barrier = slowest surviving client) --
+        costs = []
+        for k, cid in enumerate(sel):
+            if drops[k]:
+                continue
+            cid = int(cid)
+            link = T.link_for(device_of(cid))
+            costs.append(_compute_s(cid, fc, steps_of[cid], slows[k])
+                         + link.transfer_s(down_per + up_sizes[cid]))
+        round_s = max(costs) if costs else 0.0
+        history["sim_time_s"] += round_s
+
+        live = int(MK.count_true(masks_np)) if masks_np else n_rank_units
+        n_dead = len(PR.dead_modules(masks_np)) if masks_np else 0
+        loss = (float(np.mean([r[2]["loss"] for r in results]))
+                if results else float("nan"))
+        log = SV.RoundLog(rnd, int(down), int(up), live,
+                          dead_modules=n_dead,
+                          trainable_params=PR.count_trainable(trainable),
+                          loss=loss, sim_time_s=history["sim_time_s"])
+        if (rnd + 1) % fc.eval_every == 0 or rnd == fc.rounds - 1:
+            log.acc = SV.evaluate(model, base, trainable, masks, test, fc)
+            history["acc"].append((rnd, log.acc))
+        logs.append(log)
+        history["comm_gb"] += (down + up) / 1e9
+        if on_round:
+            on_round(rnd, log)
+
+    history["final_acc"] = logs[-1].acc
+    jax.block_until_ready(trainable)
+    history["wall_s"] = time.perf_counter() - t0
+    history["base"] = base
+    history["trainable"] = trainable
+    history["masks"] = masks_np
+    return history
+
+
+# ---------------------------------------------------------------------------
+# async: FedBuff-style buffered aggregation on a simulated event clock
+# ---------------------------------------------------------------------------
+
+def run_async(model, strategy, parts, train, test, fc,
+              on_round: Callable | None = None) -> dict:
+    base, trainable, masks, masks_np, n_rank_units, opt, rng = \
+        SV._init_run(model, strategy, fc)
+    step_fn = CL.make_train_step(model, opt, fc.task)
+    codec = None if fc.codec == "identity" else T.make_codec(fc.codec)
+    ef_up = T.ErrorFeedback(codec) if codec else None
+    ef_down = T.ErrorFeedback(codec) if codec else None
+    ev_rng = _event_rng(fc)
+
+    logs: list[SV.RoundLog] = []
+    history = {"rounds": logs, "acc": [], "comm_gb": 0.0, "sim_time_s": 0.0,
+               "events": []}
+    t0 = time.perf_counter()
+
+    s1_rounds = (strategy.stage1_rounds(fc.rounds)
+                 if hasattr(strategy, "stage1_rounds") else 0)
+    if s1_rounds:
+        base, trainable = SV._run_stage1(model, strategy, base, trainable,
+                                         parts, train, fc, opt, rng, logs,
+                                         history)
+
+    buffer_k = fc.buffer_k or min(fc.clients_per_round, len(parts))
+    concurrency = fc.async_concurrency or 2 * buffer_k
+    version = s1_rounds                   # server model version = agg round
+    heap: list = []                       # (finish_t, seq, cid)
+    stash: dict = {}                      # seq -> dispatch snapshot
+    buffer: list = []                     # pending (delta, params, grads, ...)
+    seq_no = 0
+    pend_down = pend_up = 0
+
+    def dispatch(now: float):
+        nonlocal seq_no, pend_down
+        cid = int(rng.integers(len(parts)))
+        dropped = bool(ev_rng.random() < fc.dropout)
+        slow = (fc.straggler_slow if ev_rng.random() < fc.straggler else 1.0)
+        if codec:
+            wire = T.flatten_update(trainable, masks_np)
+            dec, nb = ef_down.roundtrip(("down", cid), wire)
+            bc = _cast_like(T.unflatten_update(dec, trainable, masks_np),
+                            trainable)
+            down = nb + T.mask_wire_bytes(masks_np)
+        else:
+            bc = trainable
+            down = strategy.comm_down(trainable, masks_np)
+        pend_down += down
+        n_b = _n_local_batches(len(parts[cid]), fc)
+        link = T.link_for(device_of(cid))
+        # upload size is only known post-encode; model it as symmetric
+        finish = (now + link.transfer_s(down) + _compute_s(cid, fc, n_b, slow)
+                  + link.transfer_s(down))
+        gate = strategy.optimizer_gate(bc, masks_np)
+        if not dropped:
+            stash[seq_no] = (bc, masks, masks_np, gate, version)
+        heapq.heappush(heap, (finish, seq_no, cid, dropped))
+        history["events"].append((round(now, 9), "dispatch", cid, version,
+                                  dropped))
+        seq_no += 1
+
+    for _ in range(concurrency):
+        dispatch(0.0)
+
+    agg = version
+    max_events = (fc.rounds - s1_rounds) * buffer_k * 50 + 1000
+    n_events = 0
+    while agg < fc.rounds and heap and n_events < max_events:
+        n_events += 1
+        now, sq, cid, dropped = heapq.heappop(heap)
+        if dropped:
+            dispatch(now)
+            continue
+        bc, d_masks, d_masks_np, gate, d_version = stash.pop(sq)
+        gen = SV._take(
+            batches(Dataset(train.tokens[parts[cid]],
+                            train.labels[parts[cid]]),
+                    fc.batch_size, CH.client_batch_rng(fc.seed, sq, cid),
+                    epochs=fc.local_epochs),
+            fc.max_local_batches * fc.local_epochs)
+        params_k, grads_k, m = CL.local_train(
+            step_fn, base, bc, d_masks, gate, opt, gen)
+        delta = jax.tree.map(lambda a, b: (a - b).astype(a.dtype),
+                             params_k, bc)
+        if codec:
+            wire = T.flatten_update(delta, d_masks_np)
+            dec, nb = ef_up.roundtrip(cid, wire)
+            delta = _cast_like(T.unflatten_update(dec, delta, d_masks_np),
+                               delta)
+            up = nb + T.mask_wire_bytes(d_masks_np)
+        else:
+            up = strategy.comm_up(params_k, d_masks_np)
+        pend_up += up
+        staleness = version - d_version
+        w = len(parts[cid]) * (1.0 + staleness) ** -fc.staleness_alpha
+        buffer.append((delta, params_k, grads_k, m, w, staleness))
+        history["events"].append((round(now, 9), "update", cid, d_version))
+        dispatch(now)
+
+        if len(buffer) >= buffer_k:
+            # ---- staleness-weighted buffered aggregation -----------------
+            davg = SV.fedavg([b[0] for b in buffer], [b[4] for b in buffer])
+            trainable = jax.tree.map(
+                lambda p, d: (p.astype(jnp.float32)
+                              + d.astype(jnp.float32)).astype(p.dtype),
+                trainable, davg)
+            local_masks = []
+            if strategy.uses_masks():
+                for _, pk, gk, *_ in buffer:
+                    local_masks.append(strategy.local_masks(
+                        agg, pk["adapters"], (gk or {}).get("adapters"),
+                        n_rank_units))
+            trainable, masks, masks_np = SV._arbitrate(
+                strategy, trainable, local_masks, masks, masks_np, agg)
+            live = (int(MK.count_true(masks_np)) if masks_np
+                    else n_rank_units)
+            n_dead = len(PR.dead_modules(masks_np)) if masks_np else 0
+            history["sim_time_s"] = now
+            log = SV.RoundLog(
+                agg, int(pend_down), int(pend_up), live,
+                dead_modules=n_dead,
+                trainable_params=PR.count_trainable(trainable),
+                loss=float(np.mean([b[3]["loss"] for b in buffer])),
+                sim_time_s=now,
+                staleness=float(np.mean([b[5] for b in buffer])))
+            history["comm_gb"] += (pend_down + pend_up) / 1e9
+            pend_down = pend_up = 0
+            if (agg + 1) % fc.eval_every == 0 or agg == fc.rounds - 1:
+                log.acc = SV.evaluate(model, base, trainable, masks, test,
+                                      fc)
+                history["acc"].append((agg, log.acc))
+            logs.append(log)
+            if on_round:
+                on_round(agg, log)
+            buffer.clear()
+            version += 1
+            agg += 1
+
+    # in-flight broadcasts were transmitted even if never aggregated
+    history["comm_gb"] += (pend_down + pend_up) / 1e9
+    history["final_acc"] = logs[-1].acc if logs else float("nan")
+    jax.block_until_ready(trainable)
+    history["wall_s"] = time.perf_counter() - t0
+    history["base"] = base
+    history["trainable"] = trainable
+    history["masks"] = masks_np
+    return history

@@ -3,6 +3,13 @@
 Usage:
   PYTHONPATH=src python -m repro.launch.fed_train --strategy fedara \
       --rounds 20 --clients 20 --alpha 0.1
+
+The fedsim engine is selected with ``--runner``: ``seq`` is the sequential
+oracle, ``cohort`` runs each round's local phase as one vmap+scan+shard_map
+dispatch over all devices, ``async`` runs FedBuff-style buffered aggregation
+on a simulated event clock.  ``--codec`` picks the quantized transport
+(int8 blockwise / top-k sparsification, both with error feedback) and
+``--straggler`` / ``--dropout`` inject client heterogeneity.
 """
 
 from __future__ import annotations
@@ -32,6 +39,17 @@ def main(argv=None):
     ap.add_argument("--rank", type=int, default=12)
     ap.add_argument("--n-classes", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--runner", default="seq",
+                    choices=["seq", "cohort", "async"])
+    ap.add_argument("--codec", default="identity",
+                    choices=["identity", "int8", "topk"])
+    ap.add_argument("--straggler", type=float, default=0.0,
+                    help="P(client is a straggler); slowdown ×4")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="P(selected client never reports)")
+    ap.add_argument("--buffer-k", type=int, default=0,
+                    help="async: aggregate every K arrivals")
+    ap.add_argument("--event-seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = MINI.with_(n_classes=args.n_classes, adapter_rank=args.rank)
@@ -53,19 +71,26 @@ def main(argv=None):
     model = Model(cfg.with_(adapter_rank=strat.init_rank(cfg)),
                   peft=strat.peft, unroll=True)
     fc = FedConfig(rounds=args.rounds,
-                   clients_per_round=args.clients_per_round, seed=args.seed)
+                   clients_per_round=args.clients_per_round, seed=args.seed,
+                   runner=args.runner, codec=args.codec,
+                   straggler=args.straggler, dropout=args.dropout,
+                   buffer_k=args.buffer_k, event_seed=args.event_seed)
 
     def on_round(rnd, log):
         print(f"round {rnd:3d}  loss {log.loss:.4f}  "
               f"acc {log.acc if log.acc == log.acc else float('nan'):.4f}  "
               f"comm {(log.down_bytes + log.up_bytes) / 1e6:.2f} MB  "
-              f"live_ranks {log.live_ranks}  dead_modules {log.dead_modules}",
+              f"live_ranks {log.live_ranks}  dead_modules {log.dead_modules}"
+              + (f"  sim {log.sim_time_s:.1f}s" if log.sim_time_s else "")
+              + (f"  stale {log.staleness:.1f}" if log.staleness else ""),
               flush=True)
 
     h = run_federated(model, strat, parts, train, test, fc,
                       on_round=on_round)
+    sim = (f"  sim_time {h['sim_time_s']:.0f}s"
+           if h.get("sim_time_s") else "")
     print(f"final acc {h['final_acc']:.4f}  total comm "
-          f"{h['comm_gb'] * 1e3:.1f} MB  wall {h['wall_s']:.0f}s")
+          f"{h['comm_gb'] * 1e3:.1f} MB  wall {h['wall_s']:.0f}s{sim}")
 
 
 if __name__ == "__main__":
