@@ -1,0 +1,123 @@
+"""Secure-aggregation benchmark: per-phase byte overhead vs plain CommPru,
+dropout-recovery cost, fixed-point aggregate error vs field width, and the
+DP accountant's ε trajectory.
+
+Protocol-level (no training): the wire is the real CommPru payload of the
+standard MINI FedARA model, so the overhead ratios are the ones a federated
+run pays.  Emits CSV rows through benchmarks/common.py and
+``BENCH_secagg.json`` (override with BENCH_SECAGG_JSON).
+
+  PYTHONPATH=src BENCH_ONLY=secagg python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.fedsim import transport as T
+from repro.models import Model
+from repro.secagg import dp as DP
+from repro.secagg import protocol as P
+from repro.secagg.field import FieldSpec, sum_encoded
+
+JSON_PATH = os.environ.get("BENCH_SECAGG_JSON", "BENCH_secagg.json")
+
+
+def _model_wire(n_clients: int, seed: int = 0) -> dict[int, np.ndarray]:
+    """Per-client delta wires with the real MINI FedARA payload layout."""
+    model = Model(C.model_cfg(20), peft="bea", unroll=True)
+    _, trainable = model.init(jax.random.key(0))
+    masks_np = jax.tree.map(np.asarray, model.init_masks())
+    wire = T.flatten_update(trainable, masks_np)
+    rng = np.random.default_rng(seed)
+    return {i: (wire * 0.0 + rng.standard_normal(wire.size) * 0.02
+                ).astype(np.float32) for i in range(n_clients)}
+
+
+def main(quick: bool = False) -> None:
+    quick = quick or C.QUICK
+    n = 8 if quick else 16
+    wires = _model_wire(n)
+    L = next(iter(wires.values())).size
+    plain_up = L * 4 + T.HEADER_BYTES                 # identity-codec upload
+    cfg = P.SecAggConfig(threshold_frac=0.5)
+    link_of = None                                    # default 1 MB/s link
+    out = {"n_clients": n, "wire_elements": L,
+           "plain_up_bytes_per_client": plain_up}
+    rows = []
+
+    # ---- per-phase overhead at zero dropout --------------------------------
+    r0 = P.run_round(wires, list(range(n)), [], cfg, 7, link_of)
+    out["phases"] = {k: {"down": v.down, "up": v.up,
+                         "time_s": round(v.time_s, 6)}
+                     for k, v in r0.phases.items()}
+    out["up_overhead_vs_plain"] = r0.up_bytes / (n * plain_up)
+    for name, ph in r0.phases.items():
+        rows.append(C.row(f"secagg/phase_{name}_bytes", ph.up + ph.down,
+                          up=ph.up, down=ph.down))
+    rows.append(C.row("secagg/up_overhead_vs_plain",
+                      f"{out['up_overhead_vs_plain']:.4f}",
+                      plain=n * plain_up, secagg=r0.up_bytes))
+
+    # ---- recovery cost vs dropout rate -------------------------------------
+    out["recovery"] = []
+    for frac in (0.0, 0.1, 0.3, 0.5):
+        dropped = list(range(int(round(n * frac))))
+        surv = {c: w for c, w in wires.items() if c not in dropped}
+        r = P.run_round(surv, list(range(n)), dropped, cfg, 11, link_of)
+        err = (float(np.abs(r.sum_vec - np.sum(list(surv.values()), axis=0,
+                                               dtype=np.float64)).max())
+               if not r.aborted else float("nan"))
+        rec = {"dropout": frac, "n_dropped": len(dropped),
+               "recovery_bytes": r.recovery_bytes,
+               "unmask_up_bytes": r.phases["unmask"].up,
+               "round_time_s": round(r.time_s, 6),
+               "aborted": r.aborted, "aggregate_err": err}
+        out["recovery"].append(rec)
+        rows.append(C.row(f"secagg/recovery_bytes_drop{frac}",
+                          r.recovery_bytes, aborted=int(r.aborted),
+                          time_s=f"{r.time_s:.4f}"))
+
+    # ---- fixed-point aggregate error vs field width ------------------------
+    out["field_error"] = []
+    want = np.sum(list(wires.values()), axis=0, dtype=np.float64)
+    for bits, frac_bits in ((16, 7), (24, 12), (32, 16), (48, 24)):
+        spec = FieldSpec(bits=bits, frac_bits=frac_bits, clip=8.0)
+        spec.check_headroom(n)
+        agg = spec.decode_sum(
+            sum_encoded([spec.encode(w) for w in wires.values()], spec))
+        err = float(np.abs(agg - want).max())
+        out["field_error"].append({"bits": bits, "frac_bits": frac_bits,
+                                   "max_err": err,
+                                   "bound": n * spec.resolution / 2})
+        rows.append(C.row(f"secagg/field_err_bits{bits}", f"{err:.3e}",
+                          bound=f"{n * spec.resolution / 2:.3e}"))
+
+    # ---- ε trajectory ------------------------------------------------------
+    out["dp"] = []
+    horizon = 20 if quick else 100
+    for z in (0.6, 1.0, 1.5):
+        acct = DP.RDPAccountant(z, sample_rate=4 / 20)
+        traj = []
+        for t in range(1, horizon + 1):
+            acct.step()
+            if t in (1, horizon // 4, horizon // 2, horizon):
+                traj.append((t, round(acct.epsilon(1e-5), 4)))
+        out["dp"].append({"noise_multiplier": z, "delta": 1e-5,
+                          "eps_trajectory": traj})
+        rows.append(C.row(f"secagg/eps_z{z}_T{horizon}", traj[-1][1],
+                          q=0.2, delta=1e-5))
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+    rows.append(C.row("secagg/json", JSON_PATH, n_clients=n, wire=L))
+    C.emit(rows)
+
+
+if __name__ == "__main__":
+    main()

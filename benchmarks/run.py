@@ -19,7 +19,8 @@ from benchmarks import (bench_ablation, bench_arbitration, bench_comm,
                         bench_devices, bench_drift, bench_fedsim,
                         bench_importance, bench_kernel, bench_module_pruning,
                         bench_noniid, bench_rank_alloc, bench_roofline,
-                        bench_serving, bench_sweeps, bench_variance)
+                        bench_secagg, bench_serving, bench_sweeps,
+                        bench_variance)
 from benchmarks import common as C
 
 BENCHES = {
@@ -27,6 +28,7 @@ BENCHES = {
     "kernel": bench_kernel.main,              # kernels/bea_fused
     "serving": bench_serving.main,            # multi-tenant engine + bea_batched
     "fedsim": bench_fedsim.main,              # cohort/codec/async simulation
+    "secagg": bench_secagg.main,              # secure aggregation + DP costs
     "module_pruning": bench_module_pruning.main,   # Figs 13/14
     "comm": bench_comm.main,                  # Figs 8/12
     "drift": bench_drift.main,                # Fig 5

@@ -36,6 +36,35 @@ def arbitrate(local_masks: Sequence[Any], threshold: float,
     return IMP.unflatten(voted, layout)
 
 
+def arbitrate_from_votes(vote_sums: Any, n_reporting: int, threshold: float,
+                         prev_global: Any | None = None) -> Any:
+    """Aggregate-only FedArb: arbitration from *summed* one-hot votes.
+
+    ``vote_sums`` is either a mask-structured tree of per-rank vote counts or
+    the flat vector a secure-aggregation round decodes (layout then taken
+    from ``prev_global``).  Equivalent to ``arbitrate(local_masks, ...)`` on
+    the per-client mask lists whose elementwise sum is ``vote_sums`` — the
+    invariant that lets the server allocate ranks without ever seeing an
+    individual client's mask (the division mirrors ``np.mean``'s f32
+    arithmetic so the two paths agree bit-for-bit at the threshold).
+    """
+    if n_reporting <= 0:
+        return prev_global
+    if isinstance(vote_sums, np.ndarray):
+        flat = vote_sums.reshape(-1)
+        if prev_global is None:
+            raise ValueError("flat vote_sums needs prev_global for layout")
+        _, layout = IMP.flat_concat(MK.jax_to_np(prev_global))
+    else:
+        flat, layout = IMP.flat_concat(MK.jax_to_np(vote_sums))
+    frac = flat.astype(np.float32) / np.float32(n_reporting)
+    voted = frac > threshold
+    if prev_global is not None:
+        prev_flat, _ = IMP.flat_concat(MK.jax_to_np(prev_global))
+        voted = np.logical_and(voted, prev_flat.astype(bool))
+    return IMP.unflatten(voted, layout)
+
+
 def arbitrate_global(agg_scores: Any, budget: int,
                      prev_global: Any | None = None) -> Any:
     """FedARA-global ablation: mask from the aggregated model's importance."""

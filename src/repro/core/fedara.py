@@ -49,6 +49,11 @@ class Strategy:
     def arbitrate(self, rnd: int, local_masks, prev_global):
         return prev_global
 
+    def arbitrate_votes(self, rnd: int, vote_sums, n_reporting, prev_global):
+        """Aggregate-only arbitration (secure aggregation hands the server
+        vote *sums*, never per-client masks)."""
+        return prev_global
+
     def optimizer_gate(self, trainable, masks):
         """0/1 pytree over trainable leaves (FFA freezes A; RankDet gates)."""
         return None
@@ -110,6 +115,12 @@ class FedARA(Strategy):
         if not local_masks:
             return prev_global
         return ARB.arbitrate(local_masks, self.threshold, prev_global)
+
+    def arbitrate_votes(self, rnd: int, vote_sums, n_reporting, prev_global):
+        if vote_sums is None or n_reporting <= 0:
+            return prev_global
+        return ARB.arbitrate_from_votes(vote_sums, n_reporting,
+                                        self.threshold, prev_global)
 
     def optimizer_gate(self, trainable, masks):
         if not self.module_pruning or masks is None:

@@ -22,6 +22,22 @@ PROFILES = {
 POWER_W = {"rpi5": 8.0, "orin_nano": 15.0, "agx_orin": 40.0}
 BANDWIDTH = 1e6          # 1 MB/s (paper §V)
 
+# Deterministic client→device-class assignment shared by every simulation
+# runner (sequential oracle, cohort, async) so wall clocks are comparable.
+DEVICE_MIX = ("rpi5", "orin_nano", "agx_orin")
+
+
+def device_of(cid: int) -> str:
+    return DEVICE_MIX[int(cid) % len(DEVICE_MIX)]
+
+
+def compute_s(cid: int, profile_name: str, n_batches: int,
+              slow: float = 1.0) -> float:
+    """Simulated local-training seconds for client ``cid``'s device class."""
+    prof = PROFILES[device_of(cid)]
+    per_batch = prof.get(profile_name, next(iter(prof.values())))
+    return per_batch * n_batches * slow
+
 
 @dataclasses.dataclass
 class RoundCost:

@@ -9,6 +9,15 @@ The sequential per-client loop below (``runner="seq"``) is the parity oracle.
 ``"cohort"`` executes each round's local phase as one vmap+scan+shard_map
 dispatch, ``"async"`` runs FedBuff-style buffered aggregation on a simulated
 event clock (see fedsim/runner.py).
+
+Privacy (``repro.secagg``): ``FedConfig.secagg="mask"`` routes uploads
+through simulated Bonawitz secure aggregation — the server sees only the
+field aggregate of weighted deltas and the summed one-hot rank votes
+(aggregate-only arbitration) — and ``dp_clip``/``dp_noise_multiplier`` add
+client-level DP-FedAvg with a per-round ε trajectory in the history.  The
+oracle's simulated wall clock prices *encoded* bytes through the
+per-device-class ``fedsim.transport.Link``s, so ``codec="int8"`` shrinks
+simulated time, not just byte counts.
 """
 
 from __future__ import annotations
@@ -27,7 +36,11 @@ from repro.core import masks as MK
 from repro.core import pruning as PR
 from repro.data.synthetic import Dataset, batches
 from repro.federated import client as CL
+from repro.federated import devices as DV
+from repro.fedsim import transport as T
 from repro.fedsim.cohort import client_batch_rng
+from repro.secagg import dp as DP
+from repro.secagg import protocol as SA
 
 
 @dataclasses.dataclass
@@ -54,6 +67,15 @@ class FedConfig:
     staleness_alpha: float = 0.5        # async: weight = n·(1+s)^-alpha
     event_seed: int = 0                 # dropout/straggler/event-time stream
     device_profile: str = "distilbert"  # federated/devices.py compute profile
+    # ---- privacy (repro.secagg: masked aggregation + client-level DP) ------
+    secagg: str = "off"                 # off | mask (Bonawitz-style pairwise)
+    secagg_threshold: float = 2.0 / 3.0  # Shamir threshold frac of the cohort
+    secagg_bits: int = 32               # field modulus 2^bits
+    secagg_frac_bits: int = 16          # fixed-point fractional bits
+    secagg_clip: float = 8.0            # per-element clip at field encode
+    dp_clip: float = 0.0                # client delta L2 clip (0 → DP off)
+    dp_noise_multiplier: float = 0.0    # z: server noise std = z·clip on sum
+    dp_delta: float = 1e-5              # δ for the RDP accountant's ε(δ)
 
 
 @dataclasses.dataclass
@@ -136,6 +158,84 @@ def _arbitrate(strategy, trainable, local_masks, masks, masks_np, rnd):
     return trainable, masks, masks_np
 
 
+def _arbitrate_votes(strategy, trainable, vote_sums, n_reporting, masks,
+                     masks_np, rnd):
+    """Aggregate-only FedArb: the secagg server sees vote *sums*, never a
+    client's mask (core.arbitration.arbitrate_from_votes)."""
+    if strategy.uses_masks():
+        strategy.last_aggregate = trainable
+        masks_np = strategy.arbitrate_votes(rnd, vote_sums, n_reporting,
+                                            masks_np)
+        masks = jax.tree.map(jnp.asarray, masks_np)
+        trainable = dict(trainable,
+                         adapters=COMM.prune_tree(trainable["adapters"],
+                                                  masks_np))
+    return trainable, masks, masks_np
+
+
+def validate_privacy_config(fc: FedConfig) -> None:
+    """Fail loudly — and *before* any training — on privacy-knob
+    combinations the simulation cannot honor."""
+    if fc.secagg not in ("off", "mask"):
+        raise ValueError(f"unknown secagg mode {fc.secagg!r} (off|mask)")
+    if fc.codec != "identity" and (fc.secagg != "off" or fc.dp_clip > 0
+                                   or fc.dp_noise_multiplier > 0):
+        raise ValueError("privacy modes aggregate exact client deltas — "
+                         "lossy codecs cannot compose (use --codec identity)")
+    if fc.runner == "async" and (fc.secagg != "off" or fc.dp_clip > 0
+                                 or fc.dp_noise_multiplier > 0):
+        raise ValueError("secagg/DP for the async/FedBuff runner is a "
+                         "ROADMAP follow-on; use runner seq|cohort")
+    if fc.dp_noise_multiplier > 0 and fc.dp_clip <= 0:
+        raise ValueError("--dp-noise-multiplier requires --dp-clip > 0")
+    if fc.secagg != "off":
+        spec = SA.field_spec(fc)        # raises on bad bits/frac_bits combos
+        spec.check_headroom(fc.clients_per_round)
+        if fc.secagg_clip < 1.0:
+            raise ValueError("secagg_clip must be ≥ 1 (weights and one-hot "
+                             "votes encode as field elements of magnitude 1)")
+        if fc.dp_clip > fc.secagg_clip:
+            raise ValueError("dp_clip must be ≤ secagg_clip: an L2-clipped "
+                             "delta element may reach dp_clip and would be "
+                             "silently saturated by the field encode")
+
+
+def _private_round(strategy, bc, uploads, sel, masks, masks_np, fc, rnd,
+                   history, accountant):
+    """Shared secagg/DP aggregation step (seq oracle + cohort runner):
+    runs ``secagg.protocol.aggregate_round``, arbitrates from vote sums,
+    and records protocol accounting + the ε trajectory in the history."""
+    agg = SA.aggregate_round(
+        bc, uploads, [int(c) for c in sel], masks_np, fc, rnd,
+        link_of=lambda c: T.link_for(DV.device_of(c)))
+    trainable, masks, masks_np = _arbitrate_votes(
+        strategy, agg.trainable, agg.vote_sums, agg.n_reporting, masks,
+        masks_np, rnd)
+    if agg.secagg is not None:
+        history["secagg_rounds"].append({
+            "rnd": rnd,
+            "phases": {k: dataclasses.asdict(v)
+                       for k, v in agg.secagg.phases.items()},
+            "recovery_bytes": agg.secagg.recovery_bytes,
+            "n_dropped": len(agg.secagg.dropped),
+            "n_clipped": agg.n_clipped,
+            "aborted": agg.aborted})
+    if accountant is not None and not agg.aborted:
+        # an aborted round never decodes (or noises) an aggregate, so no
+        # privacy is spent — ε only grows on actual releases
+        accountant.step()
+        history["dp_eps"].append((rnd, accountant.epsilon(fc.dp_delta)))
+    return trainable, masks, masks_np, agg
+
+
+def make_accountant(fc: FedConfig, n_clients: int):
+    """Subsampled-Gaussian RDP accountant for the run's (z, q), or None."""
+    if fc.dp_noise_multiplier <= 0:
+        return None
+    q = min(fc.clients_per_round / max(n_clients, 1), 1.0)
+    return DP.RDPAccountant(fc.dp_noise_multiplier, q)
+
+
 def _run_stage1(model, strategy, base, trainable, parts, train, fc, opt, rng,
                 logs, history):
     """SLoRA stage 1: sparse full-FT rounds before LoRA (baselines.SLoRA).
@@ -183,6 +283,7 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
                   test: Dataset, fc: FedConfig,
                   on_round: Callable | None = None) -> dict:
     """Returns history dict with per-round logs and final accuracy."""
+    validate_privacy_config(fc)
     if fc.runner != "seq":
         from repro.fedsim import runner as FR   # lazy: fedsim imports us back
         return FR.run(model, strategy, parts, train, test, fc, on_round)
@@ -190,9 +291,15 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
     base, trainable, masks, masks_np, n_rank_units, opt, rng = \
         _init_run(model, strategy, fc)
     step_fn = CL.make_train_step(model, opt, fc.task)
+    codec = None if fc.codec == "identity" else T.make_codec(fc.codec)
+    ef_up = T.ErrorFeedback(codec) if codec else None
+    ef_down = T.ErrorFeedback(codec) if codec else None
+    private = SA.wants_private(fc)
+    accountant = make_accountant(fc, len(parts))
 
     logs: list[RoundLog] = []
-    history = {"rounds": logs, "acc": [], "comm_gb": 0.0}
+    history = {"rounds": logs, "acc": [], "comm_gb": 0.0, "sim_time_s": 0.0,
+               "secagg_rounds": [], "dp_eps": []}
     t0 = time.perf_counter()
 
     # SLoRA stage 1: sparse full-FT rounds before LoRA (baselines.SLoRA)
@@ -206,15 +313,25 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
     for rnd in range(s1_rounds, fc.rounds):
         sel = rng.choice(len(parts), size=min(fc.clients_per_round,
                                               len(parts)), replace=False)
-        # ---- CommPru'd broadcast ----------------------------------------
+        # ---- CommPru'd broadcast (codec'd when lossy transport is on) ----
         if masks_np is not None:
             trainable = dict(trainable,
                              adapters=COMM.prune_tree(trainable["adapters"],
                                                       masks_np))
-        down = strategy.comm_down(trainable, masks_np) * len(sel)
-        gate = strategy.optimizer_gate(trainable, masks_np)
+        if codec:
+            wire = T.flatten_update(trainable, masks_np)
+            dec, nb = ef_down.roundtrip("down", wire)
+            bc = T.cast_like(T.unflatten_update(dec, trainable, masks_np),
+                             trainable)
+            down_per = nb + T.mask_wire_bytes(masks_np)
+        else:
+            bc = trainable
+            down_per = strategy.comm_down(trainable, masks_np)
+        down = down_per * len(sel)
+        gate = strategy.optimizer_gate(bc, masks_np)
 
         results, local_masks, up = [], [], 0
+        up_sizes, steps_of = {}, {}
         for cid in sel:
             idx = parts[cid]
             client_data = Dataset(train.tokens[idx], train.labels[idx])
@@ -223,28 +340,64 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
                           epochs=fc.local_epochs)
             gen = _take(gen, fc.max_local_batches * fc.local_epochs)
             params_k, grads_k, m = CL.local_train(
-                step_fn, base, trainable, masks, gate, opt, gen)
+                step_fn, base, bc, masks, gate, opt, gen)
+            lm = None
             if strategy.uses_masks():
                 lm = strategy.local_masks(rnd, params_k["adapters"],
                                           (grads_k or {}).get("adapters"),
                                           n_rank_units)
                 local_masks.append(lm)
             # upload pruned by the *current* global mask (Alg. 1 line 28)
-            up += strategy.comm_up(params_k, masks_np)
-            results.append((params_k, len(idx), m))
+            if fc.secagg != "off":
+                up_sizes[int(cid)] = 0  # the protocol phases price uploads
+            elif codec:
+                uw = T.flatten_update(params_k, masks_np)
+                dec, nb = ef_up.roundtrip(int(cid), uw)
+                params_k = T.cast_like(
+                    T.unflatten_update(dec, params_k, masks_np), params_k)
+                up_sizes[int(cid)] = nb + T.mask_wire_bytes(masks_np)
+            else:
+                # DP-only uploads are plain (clipped) deltas in the clear
+                up_sizes[int(cid)] = strategy.comm_up(params_k, masks_np)
+            steps_of[int(cid)] = m["n_batches"]
+            results.append((int(cid), params_k, len(idx), m, lm))
 
-        # ---- FedAvg ------------------------------------------------------
-        trainable = fedavg([r[0] for r in results],
-                           [r[1] for r in results])
-        # ---- FedArb + RankDet -------------------------------------------
-        trainable, masks, masks_np = _arbitrate(
-            strategy, trainable, local_masks, masks, masks_np, rnd)
+        if private:
+            # ---- secagg / DP: the server only sees the field aggregate ---
+            trainable, masks, masks_np, agg = _private_round(
+                strategy, bc, [(c, p, w, lm) for c, p, w, _, lm in results],
+                sel, masks, masks_np, fc, rnd, history, accountant)
+            up = agg.up_bytes + sum(up_sizes.values())
+            down += agg.down_bytes
+            protocol_s = agg.time_s
+        else:
+            # ---- FedAvg --------------------------------------------------
+            trainable = fedavg([r[1] for r in results],
+                               [r[2] for r in results])
+            up = sum(up_sizes.values())
+            # ---- FedArb + RankDet ---------------------------------------
+            trainable, masks, masks_np = _arbitrate(
+                strategy, trainable, local_masks, masks, masks_np, rnd)
+            protocol_s = 0.0
+
+        # ---- simulated wall clock: encoded bytes through per-device Links
+        # (one transfer per client, like the cohort runner, so seq-vs-cohort
+        # sim clocks differ by engine, not by transport-model disagreement)
+        costs = []
+        for cid in sel:
+            cid = int(cid)
+            link = T.link_for(DV.device_of(cid))
+            costs.append(DV.compute_s(cid, fc.device_profile, steps_of[cid])
+                         + link.transfer_s(down_per + up_sizes[cid]))
+        history["sim_time_s"] += (max(costs) if costs else 0.0) + protocol_s
+
         live = int(MK.count_true(masks_np)) if masks_np else n_rank_units
         n_dead = (len(PR.dead_modules(masks_np)) if masks_np else 0)
         tp = PR.count_trainable(trainable)
-        loss = float(np.mean([r[2]["loss"] for r in results]))
+        loss = float(np.mean([r[3]["loss"] for r in results]))
         log = RoundLog(rnd, int(down), int(up), live, dead_modules=n_dead,
-                       trainable_params=tp, loss=loss)
+                       trainable_params=tp, loss=loss,
+                       sim_time_s=history["sim_time_s"])
         if (rnd + 1) % fc.eval_every == 0 or rnd == fc.rounds - 1:
             log.acc = evaluate(model, base, trainable, masks, test, fc)
             history["acc"].append((rnd, log.acc))
@@ -254,6 +407,11 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
             on_round(rnd, log)
 
     history["final_acc"] = logs[-1].acc
+    if accountant is not None:
+        history["dp"] = {"epsilon": accountant.epsilon(fc.dp_delta),
+                         "delta": fc.dp_delta,
+                         "noise_multiplier": fc.dp_noise_multiplier,
+                         "clip": fc.dp_clip}
     jax.block_until_ready(trainable)            # stop the clock honestly
     history["wall_s"] = time.perf_counter() - t0
     history["base"] = base

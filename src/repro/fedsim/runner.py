@@ -38,26 +38,20 @@ from repro.federated import devices as DV
 from repro.federated import server as SV
 from repro.fedsim import cohort as CH
 from repro.fedsim import transport as T
+from repro.secagg import protocol as SA
 
-_MIX = ("rpi5", "orin_nano", "agx_orin")
-
-
-def device_of(cid: int) -> str:
-    return _MIX[int(cid) % len(_MIX)]
+device_of = DV.device_of          # shared client→device-class assignment
 
 
 def _compute_s(cid: int, fc, n_batches: int, slow: float = 1.0) -> float:
-    prof = DV.PROFILES[device_of(cid)]
-    per_batch = prof.get(fc.device_profile, next(iter(prof.values())))
-    return per_batch * n_batches * slow
+    return DV.compute_s(cid, fc.device_profile, n_batches, slow)
 
 
 def _event_rng(fc) -> np.random.Generator:
     return np.random.default_rng([fc.event_seed, fc.seed])
 
 
-def _cast_like(dec, like):
-    return jax.tree.map(lambda d, x: jnp.asarray(d, x.dtype), dec, like)
+_cast_like = T.cast_like
 
 
 def _n_local_batches(n: int, fc) -> int:
@@ -94,9 +88,12 @@ def run_cohort(model, strategy, parts, train, test, fc,
     ef_up = T.ErrorFeedback(codec) if codec else None
     ef_down = T.ErrorFeedback(codec) if codec else None
     ev_rng = _event_rng(fc)
+    private = SA.wants_private(fc)
+    accountant = SV.make_accountant(fc, len(parts))
 
     logs: list[SV.RoundLog] = []
-    history = {"rounds": logs, "acc": [], "comm_gb": 0.0, "sim_time_s": 0.0}
+    history = {"rounds": logs, "acc": [], "comm_gb": 0.0, "sim_time_s": 0.0,
+               "secagg_rounds": [], "dp_eps": []}
     t0 = time.perf_counter()
 
     s1_rounds = (strategy.stage1_rounds(fc.rounds)
@@ -143,7 +140,7 @@ def run_cohort(model, strategy, parts, train, test, fc,
             lc, mc = np.asarray(lc, np.float32), np.asarray(mc, np.float32)
             cohort_idx = {cid: i for i, cid in enumerate(cohort.cids)}
 
-        results, local_masks, up = [], [], 0
+        results, local_masks, uploads, up = [], [], [], 0
         up_sizes, steps_of = {}, {}
         for cid in active:
             if cid in cohort_idx:
@@ -168,11 +165,15 @@ def run_cohort(model, strategy, parts, train, test, fc,
                 params_k, grads_k, m = CL.local_train(
                     step_fn, base, bc, masks, gate, opt, gen)
                 w = float(len(parts[cid]))
+            lm = None
             if strategy.uses_masks():
-                local_masks.append(strategy.local_masks(
+                lm = strategy.local_masks(
                     rnd, params_k["adapters"],
-                    (grads_k or {}).get("adapters"), n_rank_units))
-            if codec:
+                    (grads_k or {}).get("adapters"), n_rank_units)
+                local_masks.append(lm)
+            if fc.secagg != "off":
+                up_sizes[cid] = 0       # the protocol phases price uploads
+            elif codec:
                 wire = T.flatten_update(params_k, masks_np)
                 dec, nb = ef_up.roundtrip(cid, wire)
                 params_k = _cast_like(
@@ -182,10 +183,23 @@ def run_cohort(model, strategy, parts, train, test, fc,
                 up_sizes[cid] = strategy.comm_up(params_k, masks_np)
             up += up_sizes[cid]
             steps_of[cid] = m["n_batches"]
+            uploads.append((cid, params_k, w, lm))
             results.append((params_k, w, m))
 
         # ---- FedAvg: on-device psum unless a client took a side path -----
-        if results:
+        protocol_s = 0.0
+        if private:
+            # secagg / DP: masked field aggregation with dropout *recovery*
+            # (dropped clients' pairwise masks are reconstructed from
+            # survivor shares, not silently excluded; an all-dropped round
+            # still pays — and records — the advertise/share phases)
+            trainable, masks, masks_np, agg = SV._private_round(
+                strategy, bc, uploads, sel, masks, masks_np, fc, rnd,
+                history, accountant)
+            up = agg.up_bytes + sum(up_sizes.values())
+            down += agg.down_bytes
+            protocol_s = agg.time_s
+        elif results:
             if codec is None and cohort is not None and not cohort.fallback:
                 trainable = avg
             else:
@@ -203,7 +217,7 @@ def run_cohort(model, strategy, parts, train, test, fc,
             link = T.link_for(device_of(cid))
             costs.append(_compute_s(cid, fc, steps_of[cid], slows[k])
                          + link.transfer_s(down_per + up_sizes[cid]))
-        round_s = max(costs) if costs else 0.0
+        round_s = (max(costs) if costs else 0.0) + protocol_s
         history["sim_time_s"] += round_s
 
         live = int(MK.count_true(masks_np)) if masks_np else n_rank_units
@@ -223,6 +237,11 @@ def run_cohort(model, strategy, parts, train, test, fc,
             on_round(rnd, log)
 
     history["final_acc"] = logs[-1].acc
+    if accountant is not None:
+        history["dp"] = {"epsilon": accountant.epsilon(fc.dp_delta),
+                         "delta": fc.dp_delta,
+                         "noise_multiplier": fc.dp_noise_multiplier,
+                         "clip": fc.dp_clip}
     jax.block_until_ready(trainable)
     history["wall_s"] = time.perf_counter() - t0
     history["base"] = base

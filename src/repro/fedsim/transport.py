@@ -19,6 +19,7 @@ import dataclasses
 from typing import Any, Protocol
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import comm as COMM
@@ -179,6 +180,11 @@ def unflatten_update(wire: np.ndarray, like: Any, masks_np: Any | None) -> Any:
 def mask_wire_bytes(masks_np: Any | None) -> int:
     """Rank masks travel as a bitfield alongside every message."""
     return (MK.total_ranks(masks_np) + 7) // 8 if masks_np else 0
+
+
+def cast_like(dec: Any, like: Any) -> Any:
+    """Decoded f32 tree → the reference tree's leaf dtypes."""
+    return jax.tree.map(lambda d, x: jnp.asarray(d, x.dtype), dec, like)
 
 
 # ---------------------------------------------------------------------------

@@ -50,6 +50,16 @@ def main(argv=None):
     ap.add_argument("--buffer-k", type=int, default=0,
                     help="async: aggregate every K arrivals")
     ap.add_argument("--event-seed", type=int, default=0)
+    ap.add_argument("--secagg", default="off", choices=["off", "mask"],
+                    help="simulated secure aggregation (repro.secagg)")
+    ap.add_argument("--secagg-threshold", type=float, default=2.0 / 3.0,
+                    help="Shamir threshold as a fraction of the cohort")
+    ap.add_argument("--secagg-bits", type=int, default=32,
+                    help="field modulus 2^bits for the masked sum")
+    ap.add_argument("--dp-clip", type=float, default=0.0,
+                    help="client-level DP: per-client delta L2 clip")
+    ap.add_argument("--dp-noise-multiplier", type=float, default=0.0,
+                    help="client-level DP: z (server noise = z·clip on sum)")
     args = ap.parse_args(argv)
 
     cfg = MINI.with_(n_classes=args.n_classes, adapter_rank=args.rank)
@@ -74,7 +84,12 @@ def main(argv=None):
                    clients_per_round=args.clients_per_round, seed=args.seed,
                    runner=args.runner, codec=args.codec,
                    straggler=args.straggler, dropout=args.dropout,
-                   buffer_k=args.buffer_k, event_seed=args.event_seed)
+                   buffer_k=args.buffer_k, event_seed=args.event_seed,
+                   secagg=args.secagg,
+                   secagg_threshold=args.secagg_threshold,
+                   secagg_bits=args.secagg_bits,
+                   dp_clip=args.dp_clip,
+                   dp_noise_multiplier=args.dp_noise_multiplier)
 
     def on_round(rnd, log):
         print(f"round {rnd:3d}  loss {log.loss:.4f}  "
@@ -91,6 +106,16 @@ def main(argv=None):
            if h.get("sim_time_s") else "")
     print(f"final acc {h['final_acc']:.4f}  total comm "
           f"{h['comm_gb'] * 1e3:.1f} MB  wall {h['wall_s']:.0f}s{sim}")
+    if h.get("secagg_rounds"):
+        sr = h["secagg_rounds"]
+        extra = sum(sum(p["down"] + p["up"] for p in r["phases"].values())
+                    for r in sr)
+        rec = sum(r["recovery_bytes"] for r in sr)
+        print(f"secagg: {len(sr)} rounds  protocol bytes {extra / 1e6:.2f} MB"
+              f"  recovery {rec / 1e3:.1f} kB")
+    if h.get("dp"):
+        print(f"DP: ε={h['dp']['epsilon']:.3f} @ δ={h['dp']['delta']:g}  "
+              f"(z={h['dp']['noise_multiplier']}, clip={h['dp']['clip']})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,13 @@
+"""Privacy subsystem: simulated secure aggregation + client-level DP.
+
+- ``field``     fixed-point encoding into a modular field (exact sums)
+- ``masking``   pairwise/self PRG masks + Shamir-share accounting
+- ``protocol``  the 4-phase round, dropout recovery, runner integration
+- ``dp``        DP-FedAvg clipping/noise + subsampled-Gaussian RDP accountant
+"""
+
+from repro.secagg.field import FieldSpec                      # noqa: F401
+from repro.secagg.protocol import (SecAggConfig, SecAggRound,  # noqa: F401
+                                   aggregate_round, run_round,
+                                   wants_private)
+from repro.secagg.dp import RDPAccountant                     # noqa: F401

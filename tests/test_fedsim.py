@@ -205,6 +205,76 @@ def test_flatten_update_roundtrip(setup):
         np.testing.assert_allclose(np.asarray(a, np.float32), b, rtol=1e-6)
 
 
+def test_seq_oracle_prices_time_from_encoded_bytes(setup):
+    """The sequential oracle's simulated clock must go through the
+    per-device-class transport Link on *encoded* bytes — `--codec int8`
+    shrinks simulated time, not just byte counts (it used to be priced off
+    the flat 1 MB/s federated/devices.py constant, codec-blind)."""
+    h_f32 = _run(setup, "seq", strategy="fedlora", rounds=2)
+    h_int8 = _run(setup, "seq", strategy="fedlora", rounds=2, codec="int8")
+    assert h_int8["comm_gb"] < h_f32["comm_gb"] / 3      # ≈4× fewer bytes
+    assert 0 < h_int8["sim_time_s"] < h_f32["sim_time_s"]
+    # compute time is identical, so the whole gap is transfer seconds of
+    # the byte delta across the three Link classes — bounded by the slowest
+    # (rpi5) and fastest (agx_orin) links end to end
+    d_bytes = (h_f32["comm_gb"] - h_int8["comm_gb"]) * 1e9
+    d_time = h_f32["sim_time_s"] - h_int8["sim_time_s"]
+    assert d_time <= d_bytes / T.DEVICE_LINKS["rpi5"].bandwidth_bps + 1e-6
+
+
+@given(st.integers(min_value=0, max_value=2048),
+       st.integers(min_value=0, max_value=1 << 16))
+@settings(max_examples=25, deadline=None)
+def test_int8block_byte_formula_and_error_bound(n, seed):
+    """Int8Block contract: bytes == n + 4·⌈n/block⌉ + header and per-block
+    error ≤ absmax/254; empty and singleton wires must not crash."""
+    w = _wire(n, seed=seed) if n else np.zeros((0,), np.float32)
+    codec = T.Int8Block(block=128)
+    payload, nbytes = codec.encode(w)
+    nb = -(-n // 128)
+    assert nbytes == (n + 4 * nb + T.HEADER_BYTES if n else T.HEADER_BYTES)
+    dec = codec.decode(payload, n)
+    assert dec.shape == w.shape
+    for b0 in range(0, n, 128):
+        sl = slice(b0, min(b0 + 128, n))
+        bound = np.abs(w[sl]).max() / 254.0     # scale/2 = absmax/254
+        assert np.abs(dec[sl] - w[sl]).max() <= bound + 1e-7
+
+
+@given(st.integers(min_value=0, max_value=40))
+@settings(max_examples=15, deadline=None)
+def test_pack_int8_consistent_with_blockwise_codec(n):
+    """core/comm.pack_int8 (per-tensor scale, the paper's §VIII variant) and
+    fedsim.transport.Int8Block (per-block scales) agree on the contract:
+    both reconstruct the CommPru wire within their documented half-step
+    bounds, and pack_int8's payload is exactly wire_size bytes (4× f32)."""
+    import jax
+    from repro.core import adapters as AD
+    from repro.pytree import materialize
+    rng = np.random.default_rng(n)
+    r = int(rng.integers(1, 6))
+    tree = {"m": materialize(AD.adapter_meta(AD.BEA, int(rng.integers(1, 9)),
+                                             int(rng.integers(1, 9)), r),
+                             jax.random.key(n))}
+    tree["m"]["E"] = rng.normal(size=r).astype(np.float32)
+    masks = {"m": rng.random(r) > 0.4}         # may be empty or singleton
+    from repro.core import comm as COMM
+    wire = COMM.pack(tree, masks)
+    q, scale = COMM.pack_int8(tree, masks)
+    assert q.nbytes == wire.size               # 1 byte/param vs 4
+    if wire.size:
+        # per-tensor bound: global absmax/254 ≥ the per-block bound
+        per_tensor = np.abs(q.astype(np.float32) * scale - wire).max()
+        assert per_tensor <= np.abs(wire).max() / 254.0 + 1e-7
+        blk = T.Int8Block(block=64)
+        dec = blk.decode(blk.encode(wire)[0], wire.size)
+        # per-block scales are ≤ the per-tensor scale, same half-step bound
+        assert np.abs(dec - wire).max() <= np.abs(wire).max() / 254.0 + 1e-7
+    back = COMM.unpack_int8(q, scale, tree, masks)
+    for part in tree["m"]:                     # shapes survive the roundtrip
+        assert np.asarray(back["m"][part]).shape == tree["m"][part].shape
+
+
 def test_quantized_run_cuts_bytes(setup):
     h_f32 = _run(setup, "cohort", strategy="fedlora", rounds=2)
     h_int8 = _run(setup, "cohort", strategy="fedlora", rounds=2,

@@ -46,6 +46,70 @@ def test_arbitration_threshold_and_monotone(seed, th, n_clients):
     assert not np.any(out2["m"] & ~prev2["m"])
 
 
+@given(seed=st.integers(0, 60), th=st.floats(0.0, 1.0),
+       n_clients=st.integers(1, 12))
+def test_arbitrate_from_votes_equals_mask_list_arbitration(seed, th,
+                                                           n_clients):
+    """The invariant the secagg aggregate-only path relies on: arbitration
+    from per-client mask lists equals ``arbitrate_from_votes`` on their
+    elementwise sum — for both the tree-shaped and the flat (decoded wire)
+    vote representations."""
+    rng = np.random.default_rng(seed)
+    local = [{"a": rng.random(6) > 0.5, "b": {"c": rng.random((2, 4)) > 0.5}}
+             for _ in range(n_clients)]
+    prev = {"a": rng.random(6) > 0.2, "b": {"c": rng.random((2, 4)) > 0.2}}
+    want = ARB.arbitrate(local, th, prev)
+    # tree-shaped vote sums (exact integer counts, as a field sum decodes)
+    sums = {"a": np.sum([m["a"] for m in local], axis=0).astype(np.float32),
+            "b": {"c": np.sum([m["b"]["c"] for m in local],
+                              axis=0).astype(np.float32)}}
+    got = ARB.arbitrate_from_votes(sums, n_clients, th, prev)
+    # flat vote sums (layout recovered from the previous global mask)
+    flat, _ = IMP.flat_concat(sums)
+    got_flat = ARB.arbitrate_from_votes(flat, n_clients, th, prev)
+    for t in (got, got_flat):
+        np.testing.assert_array_equal(t["a"], want["a"])
+        np.testing.assert_array_equal(t["b"]["c"], want["b"]["c"])
+
+
+def test_arbitrate_from_votes_edges():
+    prev = {"m": np.ones(4, bool)}
+    assert ARB.arbitrate_from_votes({"m": np.zeros(4)}, 0, 0.5, prev) is prev
+    import pytest
+    with pytest.raises(ValueError):
+        ARB.arbitrate_from_votes(np.zeros(4, np.float32), 3, 0.5, None)
+
+
+def test_prune_tree_per_expert_broadcast():
+    """Per-expert adapters carry an E-leading axis; the (r,)-shaped rank
+    mask must broadcast over it (and over a stacked layer axis) — only the
+    2-D module path was exercised before."""
+    E, r, d_in, d_out = 3, 4, 5, 6
+    mod = {"A": np.ones((E, r, d_in), np.float32),
+           "B": np.ones((E, d_out, r), np.float32),
+           "E": np.ones((E, r), np.float32)}
+    mask = np.array([True, False, True, False])
+    out = COMM.prune_tree({"m": mod}, {"m": mask})
+    a, b, e = (np.asarray(out["m"][k]) for k in ("A", "B", "E"))
+    assert (a[:, mask] == 1).all() and (a[:, ~mask] == 0).all()
+    assert (b[..., mask] == 1).all() and (b[..., ~mask] == 0).all()
+    assert (e[:, mask] == 1).all() and (e[:, ~mask] == 0).all()
+    # byte accounting matches: per expert, only surviving ranks travel
+    assert COMM.count_params({"m": mod}, {"m": mask}) == \
+        2 * E * (d_in + d_out + 1)
+    # stacked layers × experts: (L, E, r, d) against a (L, r) mask
+    L = 2
+    mod2 = {"A": np.ones((L, E, r, d_in), np.float32),
+            "B": np.ones((L, E, d_out, r), np.float32),
+            "E": np.ones((L, E, r), np.float32)}
+    m2 = np.stack([mask, ~mask])
+    out2 = COMM.prune_tree({"m": mod2}, {"m": m2})
+    a2, e2 = np.asarray(out2["m"]["A"]), np.asarray(out2["m"]["E"])
+    for li, ml in enumerate(m2):
+        assert (a2[li][:, ml] == 1).all() and (a2[li][:, ~ml] == 0).all()
+        assert (e2[li][:, ml] == 1).all() and (e2[li][:, ~ml] == 0).all()
+
+
 @given(seed=st.integers(0, 30))
 def test_commpru_pack_unpack_roundtrip(seed):
     import jax

@@ -1,0 +1,413 @@
+"""Privacy subsystem: field exactness, mask cancellation, 4-phase byte
+accounting, dropout recovery, the RDP accountant, and secagg-vs-plain FedAvg
+parity on a real FedARA run.
+
+The integration tests honor ``SECAGG_DROPOUT`` (CI runs a {0.0, 0.3} matrix
+with fixed ``(seed, event_seed)`` so the dropout draws — and therefore the
+recovery traffic — are pinned)."""
+
+import os
+
+import numpy as np
+import pytest
+
+from tests._hyp import given, settings, st
+
+from repro.fedsim import transport as T
+from repro.secagg import dp as DP
+from repro.secagg import masking as MSK
+from repro.secagg import protocol as P
+from repro.secagg.field import FieldSpec, sum_encoded
+
+DROPOUT = float(os.environ.get("SECAGG_DROPOUT", "0.3"))
+
+
+def _wires(n, size, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return {i: (rng.standard_normal(size) * scale).astype(np.float32)
+            for i in range(n)}
+
+
+# ---------------------------------------------------------------------------
+# field
+# ---------------------------------------------------------------------------
+
+def test_field_roundtrip_within_resolution():
+    spec = FieldSpec()
+    x = np.linspace(-7.9, 7.9, 1001).astype(np.float32)
+    dec = spec.decode_sum(spec.encode(x))
+    assert np.abs(dec - x).max() <= spec.resolution / 2 + 1e-9
+
+
+def test_field_sum_is_exact_integer_arithmetic():
+    """The decoded aggregate equals the sum of *quantized* inputs exactly —
+    no float error accumulates across clients."""
+    spec = FieldSpec(frac_bits=10)
+    ws = _wires(40, 64, seed=3)
+    enc = [spec.encode(w) for w in ws.values()]
+    agg = spec.decode_sum(sum_encoded(enc, spec))
+    want = np.sum([spec.decode_sum(e) for e in enc], axis=0, dtype=np.float64)
+    np.testing.assert_array_equal(agg, want.astype(np.float32))
+
+
+def test_field_sum_bit_exact_under_permutation():
+    spec = FieldSpec()
+    ws = _wires(9, 33, seed=1)
+    enc = [spec.encode(w) for w in ws.values()]
+    ref = sum_encoded(enc, spec)
+    for perm_seed in range(4):
+        order = np.random.default_rng(perm_seed).permutation(len(enc))
+        np.testing.assert_array_equal(
+            sum_encoded([enc[i] for i in order], spec), ref)
+
+
+def test_field_headroom_checked():
+    spec = FieldSpec(bits=16, frac_bits=8, clip=8.0)
+    # (2^15 − 1) // (8·2^8) = 15 clients before the centered range overflows
+    assert spec.max_clients() == ((1 << 15) - 1) // (8 << 8)
+    spec.check_headroom(spec.max_clients())
+    with pytest.raises(ValueError):
+        spec.check_headroom(spec.max_clients() + 1)
+
+
+def test_field_bits_bounds():
+    with pytest.raises(ValueError):
+        FieldSpec(bits=63)         # center-lift must fit signed int64
+    spec = FieldSpec(bits=62, frac_bits=30)
+    dec = spec.decode_sum(spec.encode(np.float32([1.0, -2.5])))
+    np.testing.assert_allclose(dec, [1.0, -2.5], atol=spec.resolution)
+
+
+def test_field_clip_saturates_not_wraps():
+    spec = FieldSpec(clip=2.0)
+    dec = spec.decode_sum(spec.encode(np.float32([1e9, -1e9, 0.5])))
+    np.testing.assert_allclose(dec, [2.0, -2.0, 0.5], atol=1e-4)
+
+
+@given(st.integers(0, 200), st.integers(1, 30))
+@settings(max_examples=20, deadline=None)
+def test_field_sum_property(seed, n_clients):
+    spec = FieldSpec()
+    spec.check_headroom(n_clients)
+    ws = _wires(n_clients, 17, seed=seed)
+    agg = spec.decode_sum(
+        sum_encoded([spec.encode(w) for w in ws.values()], spec))
+    want = np.sum(list(ws.values()), axis=0, dtype=np.float64)
+    # n half-steps of quantization error, at most
+    assert np.abs(agg - want).max() <= n_clients * spec.resolution / 2 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# masking
+# ---------------------------------------------------------------------------
+
+def test_pairwise_masks_cancel_in_full_sum():
+    spec = FieldSpec()
+    parts = [3, 7, 11, 20]
+    ws = {c: np.zeros(50, np.float32) for c in parts}
+    masked = [MSK.mask_input(spec.encode(ws[c]), 5, c, parts, spec)
+              for c in parts]
+    agg = sum_encoded(masked, spec)
+    # pairwise masks telescoped away; only the self masks remain
+    for c in parts:
+        agg = spec.sub(agg, MSK.self_mask(5, c, 50, spec))
+    np.testing.assert_array_equal(spec.decode_sum(agg), np.zeros(50))
+
+
+def test_masks_are_deterministic_and_distinct():
+    spec = FieldSpec()
+    a = MSK.pair_mask(1, 2, 9, 16, spec)
+    np.testing.assert_array_equal(a, MSK.pair_mask(1, 9, 2, 16, spec))
+    assert not np.array_equal(a, MSK.pair_mask(2, 2, 9, 16, spec))
+    assert not np.array_equal(a, MSK.self_mask(1, 2, 16, spec))
+
+
+def test_shamir_accounting_formulas():
+    sh = MSK.ShamirSpec(n=10, threshold=7)
+    assert sh.deal_bytes_per_client() == 2 * 9 * MSK.SHARE_BYTES
+    assert sh.unmask_bytes_per_survivor(8, 2) == (7 + 2) * MSK.SHARE_BYTES
+    assert sh.recovery_bytes(8, 2) == 8 * 2 * MSK.SHARE_BYTES
+    assert sh.can_reconstruct(7) and not sh.can_reconstruct(6)
+    assert MSK.threshold_for(10, 2 / 3) == 7
+    assert MSK.threshold_for(1, 0.0) == 1
+
+
+# ---------------------------------------------------------------------------
+# protocol: the 4 phases
+# ---------------------------------------------------------------------------
+
+def _expected_phase_bytes(n, s, d, L, cfg):
+    """The per-phase totals a faithful Bonawitz round ships (asserted exact
+    — the acceptance criterion for the byte accounting)."""
+    kb, sb, H = cfg.key_bytes, cfg.share_bytes, T.HEADER_BYTES
+    deal = 2 * (n - 1) * sb
+    return {
+        "advertise": (n * (n * 2 * kb + H), n * (2 * kb + H)),
+        "share": (n * (deal + H), n * (deal + H)),
+        "masked": (0, s * (cfg.field.wire_bytes(L) + H)),
+        "unmask": (s * ((n + 7) // 8 + H), s * ((s - 1 + d) * sb + H)),
+    }
+
+
+def test_zero_dropout_round_is_plain_sum_with_exact_bytes():
+    n, L = 6, 300
+    ws = _wires(n, L, seed=2)
+    cfg = P.SecAggConfig()
+    r = P.run_round(ws, list(range(n)), [], cfg, 11)
+    want = np.sum(list(ws.values()), axis=0, dtype=np.float64)
+    assert np.abs(r.sum_vec - want).max() <= n * cfg.field.resolution
+    for name, (down, up) in _expected_phase_bytes(n, n, 0, L, cfg).items():
+        assert (r.phases[name].down, r.phases[name].up) == (down, up), name
+    assert r.recovery_bytes == 0 and not r.aborted
+    assert r.time_s > 0
+
+
+def test_dropout_recovery_matches_survivor_sum():
+    n, L = 8, 200
+    ws = _wires(n, L, seed=4)
+    dropped = [1, 5, 6]
+    surv = {c: w for c, w in ws.items() if c not in dropped}
+    cfg = P.SecAggConfig(threshold_frac=0.5)
+    r = P.run_round(surv, list(range(n)), dropped, cfg, 13)
+    want = np.sum(list(surv.values()), axis=0, dtype=np.float64)
+    assert np.abs(r.sum_vec - want).max() <= len(surv) * cfg.field.resolution
+    exp = _expected_phase_bytes(n, len(surv), len(dropped), L, cfg)
+    for name, (down, up) in exp.items():
+        assert (r.phases[name].down, r.phases[name].up) == (down, up), name
+    assert r.recovery_bytes == len(surv) * len(dropped) * cfg.share_bytes
+    assert r.recovery_bytes > 0 and not r.aborted
+
+
+def test_field_sum_bit_exact_across_client_permutations():
+    """Acceptance: the raw field aggregate is identical no matter the order
+    clients are processed in."""
+    n = 5
+    ws = _wires(n, 40, seed=6)
+    cfg = P.SecAggConfig()
+    ref = P.run_round(ws, list(range(n)), [], cfg, 3).field_sum
+    shuffled = {c: ws[c] for c in [4, 0, 3, 1, 2]}
+    got = P.run_round(shuffled, [2, 4, 1, 0, 3], [], cfg, 3).field_sum
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_round_aborts_below_shamir_threshold():
+    ws = _wires(2, 10, seed=0)
+    r = P.run_round(ws, list(range(6)), [2, 3, 4, 5],
+                    P.SecAggConfig(threshold_frac=2 / 3), 1)
+    assert r.aborted and r.sum_vec is None
+    assert r.up_bytes > 0          # the failed round still cost traffic
+
+
+def test_rank_agreement_pads_short_wires():
+    """Heterogeneous surviving-rank wire lengths agree on the cohort max."""
+    ws = {0: np.float32([1, 2, 3, 4]), 1: np.float32([1.5, 2.5]),
+          2: np.float32([0.25])}
+    r = P.run_round(ws, [0, 1, 2], [], P.SecAggConfig(), 9)
+    np.testing.assert_allclose(r.sum_vec, [2.75, 4.5, 3, 4],
+                               atol=3 * P.SecAggConfig().field.resolution)
+
+
+def test_wires_must_cover_survivors():
+    with pytest.raises(ValueError):
+        P.run_round({0: np.zeros(3, np.float32)}, [0, 1], [],
+                    P.SecAggConfig(), 0)
+
+
+# ---------------------------------------------------------------------------
+# dp
+# ---------------------------------------------------------------------------
+
+def test_clip_to_norm():
+    v = np.float32([3.0, 4.0])
+    c, norm = DP.clip_to_norm(v, 1.0)
+    assert norm == pytest.approx(5.0)
+    assert np.linalg.norm(c) == pytest.approx(1.0)
+    c2, _ = DP.clip_to_norm(v, 10.0)
+    np.testing.assert_array_equal(c2, v)
+
+
+def test_rdp_q1_closed_form():
+    """At q=1 the subsampled mechanism is the plain Gaussian: α/(2σ²)."""
+    orders = (2, 8, 32)
+    got = DP.rdp_subsampled_gaussian(1.0, 1.3, orders)
+    np.testing.assert_allclose(got, [a / (2 * 1.3 ** 2) for a in orders],
+                               rtol=1e-12)
+
+
+def test_epsilon_monotone_and_matches_spot_check():
+    z, q, delta, T_rounds = 1.1, 0.25, 1e-5, 40
+    acct = DP.RDPAccountant(z, q)
+    eps = []
+    for _ in range(T_rounds):
+        acct.step()
+        eps.append(acct.epsilon(delta))
+    assert all(b > a for a, b in zip(eps, eps[1:]))      # monotone in rounds
+    # closed-form spot check: recompute the conversion by hand at T rounds
+    per_round = DP.rdp_subsampled_gaussian(q, z, acct.orders)
+    want = np.min(per_round * T_rounds
+                  + np.log(1 / delta) / (acct.orders - 1))
+    assert eps[-1] == pytest.approx(float(want), rel=1e-12)
+    # q=1 full-batch closed form end-to-end
+    acct2 = DP.RDPAccountant(2.0, 1.0)
+    acct2.step(10)
+    a = np.arange(2, 65)
+    want2 = np.min(10 * a / (2 * 4.0) + np.log(1e5) / (a - 1))
+    assert acct2.epsilon(1e-5) <= float(want2) + 1e-9
+
+
+def test_accountant_edge_cases():
+    assert DP.RDPAccountant(0.0, 0.5).epsilon() == float("inf")
+    acct = DP.RDPAccountant(1.0, 0.5)
+    assert acct.epsilon() == 0.0                          # no rounds yet
+    assert DP.gaussian_sum_noise(4, 0.0, 1.0,
+                                 np.random.default_rng(0)).max() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# integration: secagg/DP inside the federated runners
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.configs.distilbert import MINI
+    from repro.data.synthetic import make_classification
+    from repro.federated.partition import dirichlet_partition
+    cfg = MINI.with_(n_layers=1, layer_pattern=("attn",))
+    train = make_classification(500, 10, cfg.vocab_size, 24, seed=1)
+    test = make_classification(150, 10, cfg.vocab_size, 24, seed=2)
+    parts = dirichlet_partition(train.labels, 8, alpha=0.3, seed=0)
+    return cfg, train, test, parts
+
+
+def _run(setup, **fc_kw):
+    import jax  # noqa: F401  (model init)
+    from repro.federated.baselines import all_strategies
+    from repro.federated.server import FedConfig, run_federated
+    from repro.models import Model
+    cfg, train, test, parts = setup
+    rounds = fc_kw.pop("rounds", 3)
+    strat = all_strategies(rounds=rounds)[fc_kw.pop("strategy", "fedara")]
+    if hasattr(strat, "total_rounds"):
+        strat.total_rounds, strat.warmup_rounds = rounds, 1
+        strat.final_rounds_frac = 0.34
+    model = Model(cfg, peft=strat.peft, unroll=True)
+    fc = FedConfig(rounds=rounds, clients_per_round=3, batch_size=16,
+                   max_local_batches=2, eval_every=rounds, lr=3e-3,
+                   **fc_kw)
+    return run_federated(model, strat, parts, train, test, fc)
+
+
+def test_secagg_matches_plain_fedavg(setup):
+    """Acceptance: zero-dropout secagg reproduces plain FedAvg global
+    adapters to fixed-point tolerance, with identical masks (the
+    aggregate-only arbitration path) and identical losses."""
+    import jax
+    h0 = _run(setup)
+    h1 = _run(setup, secagg="mask")
+    assert h0["rounds"][0].loss == h1["rounds"][0].loss   # same round-0 start
+    for a, b in zip(h0["rounds"], h1["rounds"]):
+        # fixed-point noise in the aggregate perturbs later rounds' starts
+        np.testing.assert_allclose(a.loss, b.loss, rtol=1e-4)
+        assert a.live_ranks == b.live_ranks
+        assert b.up_bytes > a.up_bytes          # protocol overhead is real
+    for x, y in zip(jax.tree.leaves(h0["trainable"]),
+                    jax.tree.leaves(h1["trainable"])):
+        assert np.abs(np.asarray(x, np.float32)
+                      - np.asarray(y, np.float32)).max() <= 1e-3
+    for x, y in zip(jax.tree.leaves(h0["masks"]),
+                    jax.tree.leaves(h1["masks"])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert len(h1["secagg_rounds"]) == len(h1["rounds"])
+    assert all(r["recovery_bytes"] == 0 for r in h1["secagg_rounds"])
+
+
+def test_cohort_secagg_dropout_matrix(setup):
+    """CI matrix entry: SECAGG_DROPOUT ∈ {0.0, 0.3} with pinned seeds.
+    Dropout triggers *recovery traffic*; zero dropout must not."""
+    h = _run(setup, runner="cohort", secagg="mask", secagg_threshold=0.5,
+             dropout=DROPOUT, event_seed=3)
+    assert np.isfinite(h["rounds"][-1].loss)
+    rec = sum(r["recovery_bytes"] for r in h["secagg_rounds"])
+    n_drop = sum(r["n_dropped"] for r in h["secagg_rounds"])
+    if DROPOUT == 0.0:
+        assert rec == 0 and n_drop == 0
+    # recovery bytes follow the Shamir formula per round (3 = cohort size)
+    for r in h["secagg_rounds"]:
+        n_surv = 3 - r["n_dropped"]
+        assert r["recovery_bytes"] == n_surv * r["n_dropped"] * 33
+
+
+def test_dp_epsilon_trajectory(setup):
+    h = _run(setup, secagg="mask", dp_clip=1.0, dp_noise_multiplier=1.1,
+             strategy="fedlora")
+    eps = [e for _, e in h["dp_eps"]]
+    assert len(eps) == 3
+    assert all(b > a for a, b in zip(eps, eps[1:]))
+    assert h["dp"]["epsilon"] == pytest.approx(eps[-1])
+    assert np.isfinite(h["final_acc"])
+
+
+def test_aggregate_round_weighted_parity_under_extreme_skew():
+    """Client data-size ratios far beyond the per-element field clip must
+    still decode to plain weighted FedAvg — the weight vector is rescaled
+    as a whole (the normalizer cancels in Σw·Δ/Σw), never silently clipped
+    element-wise."""
+    import jax
+    from repro.federated.server import FedConfig
+    rng = np.random.default_rng(0)
+    like = {"adapters": {"m": {"A": np.zeros((2, 3), np.float32),
+                               "B": np.zeros((4, 2), np.float32)}}}
+    bc = jax.tree.map(np.copy, like)
+    weights = [4000.0, 10.0, 7.0]          # ratio ≈ 571 ≫ secagg_clip = 8
+    trees = [jax.tree.map(lambda x: rng.normal(
+        size=x.shape).astype(np.float32), like) for _ in weights]
+    ups = [(i, t, w, None) for i, (t, w) in enumerate(zip(trees, weights))]
+    agg = P.aggregate_round(bc, ups, [0, 1, 2], None,
+                            FedConfig(secagg="mask"), 0)
+    wn = np.asarray(weights) / np.sum(weights)
+    for path in ("A", "B"):
+        want = np.sum([w * np.asarray(t["adapters"]["m"][path])
+                       for w, t in zip(wn, trees)], axis=0)
+        got = np.asarray(agg.trainable["adapters"]["m"][path])
+        np.testing.assert_allclose(got, want, atol=5e-4)
+
+
+def test_dp_only_mode_accounts_plain_upload_bytes(setup):
+    """DP without secagg still uploads full clipped deltas in the clear —
+    RoundLog.up_bytes and comm_gb must match the plain run, not read zero."""
+    h0 = _run(setup, strategy="fedlora", rounds=2)
+    h1 = _run(setup, strategy="fedlora", rounds=2, dp_clip=1.0,
+              dp_noise_multiplier=1.0)
+    assert [l.up_bytes for l in h1["rounds"]] == \
+        [l.up_bytes for l in h0["rounds"]]
+    assert h1["comm_gb"] == pytest.approx(h0["comm_gb"])
+    assert h1["sim_time_s"] == pytest.approx(h0["sim_time_s"])
+
+
+def test_aborted_rounds_spend_no_epsilon(setup):
+    """Total dropout aborts every round below the Shamir threshold: the
+    protocol's advertise/share bytes are still paid and recorded, but no
+    aggregate is ever released, so the accountant must not tick."""
+    h = _run(setup, runner="cohort", secagg="mask", dropout=1.0,
+             event_seed=3, dp_clip=1.0, dp_noise_multiplier=1.1,
+             strategy="fedlora", rounds=2)
+    assert len(h["secagg_rounds"]) == 2
+    assert all(r["aborted"] for r in h["secagg_rounds"])
+    assert h["dp_eps"] == []
+    assert h["comm_gb"] > 0            # the failed phases still cost bytes
+
+
+def test_privacy_config_validation():
+    from repro.federated.server import FedConfig, validate_privacy_config
+    with pytest.raises(ValueError):
+        validate_privacy_config(FedConfig(secagg="mask", codec="int8"))
+    with pytest.raises(ValueError):        # DP aggregates exact deltas too
+        validate_privacy_config(FedConfig(dp_clip=1.0, codec="topk"))
+    with pytest.raises(ValueError):
+        validate_privacy_config(FedConfig(secagg="mask", runner="async"))
+    with pytest.raises(ValueError):
+        validate_privacy_config(FedConfig(dp_noise_multiplier=1.0))
+    with pytest.raises(ValueError):
+        validate_privacy_config(FedConfig(secagg="bogus"))
+    validate_privacy_config(FedConfig(secagg="mask", runner="cohort",
+                                      dp_clip=1.0, dp_noise_multiplier=1.0))
