@@ -1,5 +1,6 @@
-"""fedsim benchmark: cohort-vs-sequential round throughput, quantized
-transport byte ratios, and async event throughput.
+"""fedsim benchmark: cohort-vs-sequential round throughput, delta-codec
+byte ratios + convergence-vs-bytes curves (identity / int8 / topk / signsgd
+/ powersgd through the shared upload pipeline), and async event throughput.
 
 The throughput comparison runs in a subprocess with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the shard_map cohort
@@ -74,11 +75,19 @@ _SUB = textwrap.dedent("""
                           else rec["seq_round_s"] / rec["cohort_round_s"])
         out["rows"].append(rec)
 
-    # transport: bytes per round under each codec (cohort runner)
-    out["codec"] = {}
-    for codec in ("identity", "int8", "topk"):
-        _, h = timed("cohort", r_short, 4, codec)
-        out["codec"][codec] = h["comm_gb"] * 1e9 / r_short
+    # transport: bytes per round + convergence-vs-bytes under each codec
+    # (cohort runner, same seeds → same client draws across codecs)
+    out["codec"], out["convergence"] = {}, {}
+    r_conv = r_short if quick else r_long
+    for codec in ("identity", "int8", "topk", "signsgd", "powersgd"):
+        _, h = timed("cohort", r_conv, 4, codec)
+        out["codec"][codec] = h["comm_gb"] * 1e9 / r_conv
+        cum = 0
+        curve = []
+        for l in h["rounds"]:
+            cum += l.down_bytes + l.up_bytes
+            curve.append([cum, l.loss])
+        out["convergence"][codec] = curve
 
     # async: simulated time + events per aggregation round
     strat = all_strategies(rounds=r_long)["fedlora"]
@@ -120,8 +129,10 @@ def main(quick: bool = False) -> None:
                           ndev=out["ndev"], noisy=int(rec["noisy"])))
     ident = out["codec"]["identity"]
     for name, b in out["codec"].items():
+        final_loss = out["convergence"][name][-1][1]
         rows.append(C.row(f"fedsim/codec_{name}_bytes_per_round",
-                          int(b), ratio=f"{ident / max(b, 1):.2f}"))
+                          int(b), ratio=f"{ident / max(b, 1):.2f}",
+                          final_loss=f"{final_loss:.4f}"))
     a = out["async"]
     rows.append(C.row("fedsim/async_sim_time_s", f"{a['sim_time_s']:.1f}",
                       events=a["events"],

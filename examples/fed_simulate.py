@@ -48,9 +48,11 @@ for a, b in zip(h_seq["rounds"], h_coh["rounds"]):
 print(f"wall: seq {h_seq['wall_s']:.1f}s  cohort {h_coh['wall_s']:.1f}s  "
       f"(cohort simulated round clock: {h_coh['sim_time_s']:.0f}s)")
 
-# 2. Quantized transport: int8 blockwise + error feedback ≈ 4× fewer bytes,
-#    top-k (10%: values + indices) ≈ 5×, at (near) parity in loss.
-for codec in ("identity", "int8", "topk"):
+# 2. Delta-codec transport (the shared upload pipeline): int8 blockwise ≈ 4×
+#    fewer bytes, top-k (10%: values + indices) ≈ 5×, 1-bit signSGD ≈ 28×,
+#    rank-2 PowerSGD ≈ 53×, at (near) parity in loss — all with per-endpoint
+#    error feedback on the client→server *delta* wire.
+for codec in ("identity", "int8", "topk", "signsgd", "powersgd"):
     h = go(runner="cohort", codec=codec)
     print(f"codec {codec:9s} total {h['comm_gb'] * 1e3:7.2f} MB  "
           f"final loss {h['rounds'][-1].loss:.4f}")

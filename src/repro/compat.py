@@ -1,0 +1,17 @@
+"""Version-drift shims shared across the repo.
+
+jax.shard_map graduated from jax.experimental between the versions this
+repo targets, and the replication-check kwarg was renamed with it
+(check_rep → check_vma).  Import ``shard_map``/``SHARD_MAP_KWARGS`` from
+here instead of re-deriving the spelling locally.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map, SHARD_MAP_KWARGS = jax.shard_map, {"check_vma": False}
+else:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+    SHARD_MAP_KWARGS = {"check_rep": False}

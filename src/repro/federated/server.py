@@ -1,8 +1,8 @@
 """Federated server loop (paper Algorithm 1), strategy-agnostic.
 
 Implements: client selection → CommPru'd broadcast → parallel local training
-→ FedAvg aggregation → FedArb mask arbitration → RankDet module gating — with
-byte-exact communication accounting per round.
+→ delta-space aggregation → FedArb mask arbitration → RankDet module gating —
+with byte-exact communication accounting per round.
 
 The sequential per-client loop below (``runner="seq"``) is the parity oracle.
 ``FedConfig.runner`` routes the same run through ``repro.fedsim``:
@@ -10,14 +10,22 @@ The sequential per-client loop below (``runner="seq"``) is the parity oracle.
 dispatch, ``"async"`` runs FedBuff-style buffered aggregation on a simulated
 event clock (see fedsim/runner.py).
 
-Privacy (``repro.secagg``): ``FedConfig.secagg="mask"`` routes uploads
-through simulated Bonawitz secure aggregation — the server sees only the
-field aggregate of weighted deltas and the summed one-hot rank votes
-(aggregate-only arbitration) — and ``dp_clip``/``dp_noise_multiplier`` add
-client-level DP-FedAvg with a per-round ε trajectory in the history.  The
-oracle's simulated wall clock prices *encoded* bytes through the
-per-device-class ``fedsim.transport.Link``s, so ``codec="int8"`` shrinks
-simulated time, not just byte counts.
+Every upload — seq, cohort, async, and SLoRA stage 1 — is a
+``fedsim.pipeline.ClientUpdate`` (delta tree + weight + rank votes) routed
+through the shared delta pipeline: flatten → DP clip → codec (identity /
+int8 / topk / signsgd / powersgd) → error feedback → byte accounting → link
+pricing → aggregate.  Broadcasts ride the same codecs as delta-coded streams
+(``DeltaChannel``).
+
+Privacy (``repro.secagg``): ``FedConfig.secagg="mask"`` routes the same
+encoded delta wires through simulated Bonawitz secure aggregation — the
+server sees only the field aggregate of weighted deltas and the summed
+one-hot rank votes (aggregate-only arbitration) — and
+``dp_clip``/``dp_noise_multiplier`` add client-level DP-FedAvg with a
+per-round ε trajectory in the history.  Field-exact codecs (signsgd)
+compose with both.  The oracle's simulated wall clock prices *encoded*
+bytes through the per-device-class ``fedsim.transport.Link``s, so lossy
+codecs shrink simulated time, not just byte counts.
 """
 
 from __future__ import annotations
@@ -37,6 +45,7 @@ from repro.core import pruning as PR
 from repro.data.synthetic import Dataset, batches
 from repro.federated import client as CL
 from repro.federated import devices as DV
+from repro.fedsim import pipeline as PL
 from repro.fedsim import transport as T
 from repro.fedsim.cohort import client_batch_rng
 from repro.secagg import dp as DP
@@ -58,7 +67,8 @@ class FedConfig:
     eval_batches: int = 16
     # ---- fedsim (device-parallel simulation / transport / async) ----------
     runner: str = "seq"                 # seq | cohort | async
-    codec: str = "identity"             # identity | int8 | topk
+    codec: str = "identity"      # identity | int8 | topk | signsgd | powersgd
+    powersgd_rank: int = 2              # q for the powersgd codec
     dropout: float = 0.0                # P(selected client never reports)
     straggler: float = 0.0              # P(client is a straggler this round)
     straggler_slow: float = 4.0         # straggler compute-time multiplier
@@ -178,10 +188,15 @@ def validate_privacy_config(fc: FedConfig) -> None:
     combinations the simulation cannot honor."""
     if fc.secagg not in ("off", "mask"):
         raise ValueError(f"unknown secagg mode {fc.secagg!r} (off|mask)")
-    if fc.codec != "identity" and (fc.secagg != "off" or fc.dp_clip > 0
-                                   or fc.dp_noise_multiplier > 0):
-        raise ValueError("privacy modes aggregate exact client deltas — "
-                         "lossy codecs cannot compose (use --codec identity)")
+    if fc.codec not in T.FIELD_EXACT and (fc.secagg != "off"
+                                          or fc.dp_clip > 0
+                                          or fc.dp_noise_multiplier > 0):
+        raise ValueError(
+            "privacy modes need a field-exact codec — one whose decoded "
+            "delta never exceeds the DP clip norm and encodes faithfully "
+            "into the fixed-point field (signSGD's sign+scale wire "
+            "contracts the L2 norm per block; int8/topk/powersgd do not "
+            f"qualify).  Use --codec {'|'.join(T.FIELD_EXACT)}")
     if fc.runner == "async" and (fc.secagg != "off" or fc.dp_clip > 0
                                  or fc.dp_noise_multiplier > 0):
         raise ValueError("secagg/DP for the async/FedBuff runner is a "
@@ -200,14 +215,13 @@ def validate_privacy_config(fc: FedConfig) -> None:
                              "silently saturated by the field encode")
 
 
-def _private_round(strategy, bc, uploads, sel, masks, masks_np, fc, rnd,
-                   history, accountant):
-    """Shared secagg/DP aggregation step (seq oracle + cohort runner):
-    runs ``secagg.protocol.aggregate_round``, arbitrates from vote sums,
-    and records protocol accounting + the ε trajectory in the history."""
-    agg = SA.aggregate_round(
-        bc, uploads, [int(c) for c in sel], masks_np, fc, rnd,
-        link_of=lambda c: T.link_for(DV.device_of(c)))
+def _private_round(strategy, bc, encoded, sel, masks, masks_np, fc, rnd,
+                   history, accountant, pipe):
+    """Shared secagg/DP aggregation step (seq oracle, cohort runner, and
+    SLoRA stage 1): routes the pipeline's encoded delta wires through
+    ``secagg.protocol.aggregate_round``, arbitrates from vote sums, and
+    records protocol accounting + the ε trajectory in the history."""
+    agg = pipe.aggregate_private(bc, encoded, sel, masks_np, rnd)
     trainable, masks, masks_np = _arbitrate_votes(
         strategy, agg.trainable, agg.vote_sums, agg.n_reporting, masks,
         masks_np, rnd)
@@ -237,21 +251,37 @@ def make_accountant(fc: FedConfig, n_clients: int):
 
 
 def _run_stage1(model, strategy, base, trainable, parts, train, fc, opt, rng,
-                logs, history):
+                logs, history, accountant=None):
     """SLoRA stage 1: sparse full-FT rounds before LoRA (baselines.SLoRA).
     Consumes ``rng`` selections exactly like main rounds, so runners that
-    share the selection stream stay aligned with the oracle."""
+    share the selection stream stay aligned with the oracle.
+
+    Uploads ride the shared delta pipeline on the *sparse-gate* wire (the
+    gate is server-seeded, so indices never travel): base deltas are
+    DP-clipped by the shared clip stage, codec'd with error feedback,
+    byte-accounted exactly, and priced through the same per-device links as
+    stage 2 — and when privacy is on they flow through secagg/DP like any
+    other round (previously stage 1 uploaded raw unclipped deltas in the
+    clear, bypassing transport and secagg entirely)."""
     s1_rounds = strategy.stage1_rounds(fc.rounds)
     masks = model.init_masks() if strategy.uses_masks() else None
     base0 = base
     s1_gate = strategy.sparse_gate(base, fc.seed)
     s1_step = CL.make_train_step(model, opt, fc.task, train_base=True)
     s1_update = CL.make_base_update_step(opt)
+    pipe = PL.UploadPipeline(
+        fc, strategy=None,
+        flatten=lambda d, m: PL.flatten_gate(d, s1_gate),
+        unflatten=lambda w, like, m: PL.unflatten_gate(w, like, s1_gate))
+    private = SA.wants_private(fc)
+    s1_stats = history.setdefault(
+        "stage1", {"rounds": 0, "up_bytes": 0, "n_clipped": 0})
     for rnd in range(s1_rounds):
         sel = rng.choice(len(parts), size=min(fc.clients_per_round,
                                               len(parts)), replace=False)
-        deltas, sizes = [], []
-        comm = strategy.stage1_comm_bytes(base) * len(sel) * 2
+        down_per = strategy.stage1_comm_bytes(base)
+        down = down_per * len(sel)
+        encoded = []
         for cid in sel:
             idx = parts[cid]
             cd = Dataset(train.tokens[idx], train.labels[idx])
@@ -260,20 +290,42 @@ def _run_stage1(model, strategy, base, trainable, parts, train, fc, opt, rng,
             gen = _take(batches(cd, fc.batch_size,
                                 client_batch_rng(fc.seed, rnd, cid)),
                         fc.max_local_batches)
+            n_b = 0
             for bt in gen:
                 jb = {k: jnp.asarray(v) for k, v in bt.items()}
                 params_k, opt_t, _, gb, _, _ = s1_step(
                     bk, params_k, opt_t, masks, None, jb)
                 bk, opt_b = s1_update(bk, opt_b, gb, s1_gate)
-            deltas.append(jax.tree.map(lambda a, b: a - b, bk, base))
-            sizes.append(len(idx))
-        davg = fedavg(deltas, sizes)
-        base = jax.tree.map(lambda b, d: b + d, base, davg)
-        logs.append(RoundLog(rnd, comm // 2, comm // 2,
+                n_b += 1
+            upd = PL.ClientUpdate(int(cid), PL.delta_tree(bk, base),
+                                  weight=float(len(idx)), n_steps=n_b)
+            encoded.append(pipe.encode(upd, None))
+        protocol_s = 0.0
+        if private:
+            base, _, _, agg = _private_round(
+                strategy, base, encoded, sel, None, None, fc, rnd, history,
+                accountant, pipe)
+            up = agg.up_bytes + sum(e.nbytes for e in encoded)
+            down += agg.down_bytes
+            protocol_s = agg.time_s
+        else:
+            base = pipe.aggregate(base, encoded)
+            up = sum(e.nbytes for e in encoded)
+        s1_stats["rounds"] += 1
+        s1_stats["up_bytes"] += up
+        s1_stats["n_clipped"] += sum(int(e.clipped) for e in encoded)
+        enc_of = {e.cid: e for e in encoded}
+        costs = [pipe.client_time(
+            cid, down_per, enc_of[int(cid)].nbytes,
+            DV.compute_s(int(cid), fc.device_profile,
+                         enc_of[int(cid)].n_steps)) for cid in sel]
+        history["sim_time_s"] += (max(costs) if costs else 0.0) + protocol_s
+        logs.append(RoundLog(rnd, int(down), int(up),
                              live_ranks=0, dead_modules=0,
                              trainable_params=PR.count_trainable(base),
-                             loss=float("nan")))
-        history["comm_gb"] += comm / 1e9
+                             loss=float("nan"),
+                             sim_time_s=history["sim_time_s"]))
+        history["comm_gb"] += (down + up) / 1e9
     # convert the sparse delta into the LoRA init, reset the base
     trainable = strategy.svd_init_from_delta(model, base0, base, trainable)
     return base0, trainable
@@ -291,9 +343,7 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
     base, trainable, masks, masks_np, n_rank_units, opt, rng = \
         _init_run(model, strategy, fc)
     step_fn = CL.make_train_step(model, opt, fc.task)
-    codec = None if fc.codec == "identity" else T.make_codec(fc.codec)
-    ef_up = T.ErrorFeedback(codec) if codec else None
-    ef_down = T.ErrorFeedback(codec) if codec else None
+    pipe = PL.UploadPipeline(fc, strategy)
     private = SA.wants_private(fc)
     accountant = make_accountant(fc, len(parts))
 
@@ -308,30 +358,21 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
     if s1_rounds:
         base, trainable = _run_stage1(model, strategy, base, trainable,
                                       parts, train, fc, opt, rng, logs,
-                                      history)
+                                      history, accountant)
 
     for rnd in range(s1_rounds, fc.rounds):
         sel = rng.choice(len(parts), size=min(fc.clients_per_round,
                                               len(parts)), replace=False)
-        # ---- CommPru'd broadcast (codec'd when lossy transport is on) ----
+        # ---- CommPru'd broadcast (delta-coded when a codec is on) --------
         if masks_np is not None:
             trainable = dict(trainable,
                              adapters=COMM.prune_tree(trainable["adapters"],
                                                       masks_np))
-        if codec:
-            wire = T.flatten_update(trainable, masks_np)
-            dec, nb = ef_down.roundtrip("down", wire)
-            bc = T.cast_like(T.unflatten_update(dec, trainable, masks_np),
-                             trainable)
-            down_per = nb + T.mask_wire_bytes(masks_np)
-        else:
-            bc = trainable
-            down_per = strategy.comm_down(trainable, masks_np)
+        bc, down_per = pipe.broadcast(trainable, masks_np)
         down = down_per * len(sel)
         gate = strategy.optimizer_gate(bc, masks_np)
 
-        results, local_masks, up = [], [], 0
-        up_sizes, steps_of = {}, {}
+        results, local_masks, encoded = [], [], []
         for cid in sel:
             idx = parts[cid]
             client_data = Dataset(train.tokens[idx], train.labels[idx])
@@ -347,34 +388,26 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
                                           (grads_k or {}).get("adapters"),
                                           n_rank_units)
                 local_masks.append(lm)
-            # upload pruned by the *current* global mask (Alg. 1 line 28)
-            if fc.secagg != "off":
-                up_sizes[int(cid)] = 0  # the protocol phases price uploads
-            elif codec:
-                uw = T.flatten_update(params_k, masks_np)
-                dec, nb = ef_up.roundtrip(int(cid), uw)
-                params_k = T.cast_like(
-                    T.unflatten_update(dec, params_k, masks_np), params_k)
-                up_sizes[int(cid)] = nb + T.mask_wire_bytes(masks_np)
-            else:
-                # DP-only uploads are plain (clipped) deltas in the clear
-                up_sizes[int(cid)] = strategy.comm_up(params_k, masks_np)
-            steps_of[int(cid)] = m["n_batches"]
-            results.append((int(cid), params_k, len(idx), m, lm))
+            # upload pruned by the *current* global mask (Alg. 1 line 28),
+            # as a delta through the shared pipeline stages
+            upd = PL.ClientUpdate(int(cid), PL.delta_tree(params_k, bc),
+                                  weight=float(len(idx)), votes=lm,
+                                  n_steps=m["n_batches"])
+            encoded.append(pipe.encode(upd, masks_np))
+            results.append((int(cid), m))
 
         if private:
             # ---- secagg / DP: the server only sees the field aggregate ---
             trainable, masks, masks_np, agg = _private_round(
-                strategy, bc, [(c, p, w, lm) for c, p, w, _, lm in results],
-                sel, masks, masks_np, fc, rnd, history, accountant)
-            up = agg.up_bytes + sum(up_sizes.values())
+                strategy, bc, encoded, sel, masks, masks_np, fc, rnd,
+                history, accountant, pipe)
+            up = agg.up_bytes + sum(e.nbytes for e in encoded)
             down += agg.down_bytes
             protocol_s = agg.time_s
         else:
-            # ---- FedAvg --------------------------------------------------
-            trainable = fedavg([r[1] for r in results],
-                               [r[2] for r in results])
-            up = sum(up_sizes.values())
+            # ---- delta-space FedAvg --------------------------------------
+            trainable = pipe.aggregate(bc, encoded)
+            up = sum(e.nbytes for e in encoded)
             # ---- FedArb + RankDet ---------------------------------------
             trainable, masks, masks_np = _arbitrate(
                 strategy, trainable, local_masks, masks, masks_np, rnd)
@@ -383,18 +416,17 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
         # ---- simulated wall clock: encoded bytes through per-device Links
         # (one transfer per client, like the cohort runner, so seq-vs-cohort
         # sim clocks differ by engine, not by transport-model disagreement)
-        costs = []
-        for cid in sel:
-            cid = int(cid)
-            link = T.link_for(DV.device_of(cid))
-            costs.append(DV.compute_s(cid, fc.device_profile, steps_of[cid])
-                         + link.transfer_s(down_per + up_sizes[cid]))
+        enc_of = {e.cid: e for e in encoded}
+        costs = [pipe.client_time(
+            int(cid), down_per, enc_of[int(cid)].nbytes,
+            DV.compute_s(int(cid), fc.device_profile,
+                         enc_of[int(cid)].n_steps)) for cid in sel]
         history["sim_time_s"] += (max(costs) if costs else 0.0) + protocol_s
 
         live = int(MK.count_true(masks_np)) if masks_np else n_rank_units
         n_dead = (len(PR.dead_modules(masks_np)) if masks_np else 0)
         tp = PR.count_trainable(trainable)
-        loss = float(np.mean([r[3]["loss"] for r in results]))
+        loss = float(np.mean([r[1]["loss"] for r in results]))
         log = RoundLog(rnd, int(down), int(up), live, dead_modules=n_dead,
                        trainable_params=tp, loss=loss,
                        sim_time_s=history["sim_time_s"])

@@ -1,5 +1,6 @@
 """Device-parallel federated simulation: vectorized client cohorts
-(cohort.py), a quantized transport stack (transport.py), and the event-driven
+(cohort.py), a quantized transport stack (transport.py), the delta-space
+upload pipeline every producer shares (pipeline.py), and the event-driven
 sync/async round runner (runner.py).
 
 ``runner`` is imported lazily by ``repro.federated.server.run_federated`` —
@@ -7,6 +8,7 @@ do not import it here (it imports server back for the shared round
 machinery).
 """
 
-from repro.fedsim import cohort, transport  # noqa: F401
+from repro.fedsim import cohort, pipeline, transport  # noqa: F401
 from repro.fedsim.cohort import build_cohort, client_batch_rng, make_cohort_fn  # noqa: F401
+from repro.fedsim.pipeline import ClientUpdate, EncodedUpdate, UploadPipeline  # noqa: F401
 from repro.fedsim.transport import ErrorFeedback, make_codec  # noqa: F401

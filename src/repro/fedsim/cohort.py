@@ -28,15 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import SHARD_MAP_KWARGS as _SM_KW
+from repro.compat import shard_map as _shard_map
 from repro.data.synthetic import Dataset, batches as batch_iter
-
-# jax.shard_map graduated from jax.experimental between the versions this
-# repo targets; keep both spellings (and their replication-check kwarg).
-if hasattr(jax, "shard_map"):
-    _shard_map, _SM_KW = jax.shard_map, {"check_vma": False}
-else:
-    from jax.experimental.shard_map import shard_map as _shard_map
-    _SM_KW = {"check_rep": False}
 
 
 def client_batch_rng(seed: int, rnd: int, cid: int) -> np.random.Generator:

@@ -15,8 +15,9 @@ in federated/server.py):
 Every randomness source is seeded — selection from ``fc.seed`` (the oracle's
 stream), event times / dropout / stragglers from ``fc.event_seed`` — so one
 (seed, event_seed) pair reproduces the identical history and event log.
-Quantized transport (``fc.codec``) routes every byte through
-fedsim/transport.py codecs with per-endpoint error feedback.
+Both runners emit ``fedsim.pipeline.ClientUpdate`` deltas through the shared
+delta pipeline (flatten → clip → codec → error feedback → byte accounting →
+link pricing), the same wire path the sequential oracle uses.
 """
 
 from __future__ import annotations
@@ -26,7 +27,6 @@ import time
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import masks as MK
@@ -37,6 +37,7 @@ from repro.federated import client as CL
 from repro.federated import devices as DV
 from repro.federated import server as SV
 from repro.fedsim import cohort as CH
+from repro.fedsim import pipeline as PL
 from repro.fedsim import transport as T
 from repro.secagg import protocol as SA
 
@@ -49,9 +50,6 @@ def _compute_s(cid: int, fc, n_batches: int, slow: float = 1.0) -> float:
 
 def _event_rng(fc) -> np.random.Generator:
     return np.random.default_rng([fc.event_seed, fc.seed])
-
-
-_cast_like = T.cast_like
 
 
 def _n_local_batches(n: int, fc) -> int:
@@ -84,9 +82,7 @@ def run_cohort(model, strategy, parts, train, test, fc,
     cpr = min(fc.clients_per_round, len(parts))
     c_pad = -(-cpr // ndev) * ndev                        # shardable cohort
 
-    codec = None if fc.codec == "identity" else T.make_codec(fc.codec)
-    ef_up = T.ErrorFeedback(codec) if codec else None
-    ef_down = T.ErrorFeedback(codec) if codec else None
+    pipe = PL.UploadPipeline(fc, strategy)
     ev_rng = _event_rng(fc)
     private = SA.wants_private(fc)
     accountant = SV.make_accountant(fc, len(parts))
@@ -101,24 +97,16 @@ def run_cohort(model, strategy, parts, train, test, fc,
     if s1_rounds:
         base, trainable = SV._run_stage1(model, strategy, base, trainable,
                                          parts, train, fc, opt, rng, logs,
-                                         history)
+                                         history, accountant)
 
     for rnd in range(s1_rounds, fc.rounds):
         sel = rng.choice(len(parts), size=cpr, replace=False)
-        # ---- CommPru'd broadcast (codec'd when lossy transport is on) ----
+        # ---- CommPru'd broadcast (delta-coded when a codec is on) --------
         if masks_np is not None:
             trainable = dict(trainable,
                              adapters=COMM.prune_tree(trainable["adapters"],
                                                       masks_np))
-        if codec:
-            wire = T.flatten_update(trainable, masks_np)
-            dec, nb = ef_down.roundtrip("down", wire)
-            bc = _cast_like(T.unflatten_update(dec, trainable, masks_np),
-                            trainable)
-            down_per = nb + T.mask_wire_bytes(masks_np)
-        else:
-            bc = trainable
-            down_per = strategy.comm_down(trainable, masks_np)
+        bc, down_per = pipe.broadcast(trainable, masks_np)
         down = down_per * len(sel)
         gate = strategy.optimizer_gate(bc, masks_np)
 
@@ -140,8 +128,8 @@ def run_cohort(model, strategy, parts, train, test, fc,
             lc, mc = np.asarray(lc, np.float32), np.asarray(mc, np.float32)
             cohort_idx = {cid: i for i, cid in enumerate(cohort.cids)}
 
-        results, local_masks, uploads, up = [], [], [], 0
-        up_sizes, steps_of = {}, {}
+        results, local_masks, encoded = [], [], []
+        up = 0
         for cid in active:
             if cid in cohort_idx:
                 i = cohort_idx[cid]
@@ -171,22 +159,15 @@ def run_cohort(model, strategy, parts, train, test, fc,
                     rnd, params_k["adapters"],
                     (grads_k or {}).get("adapters"), n_rank_units)
                 local_masks.append(lm)
-            if fc.secagg != "off":
-                up_sizes[cid] = 0       # the protocol phases price uploads
-            elif codec:
-                wire = T.flatten_update(params_k, masks_np)
-                dec, nb = ef_up.roundtrip(cid, wire)
-                params_k = _cast_like(
-                    T.unflatten_update(dec, params_k, masks_np), params_k)
-                up_sizes[cid] = nb + T.mask_wire_bytes(masks_np)
-            else:
-                up_sizes[cid] = strategy.comm_up(params_k, masks_np)
-            up += up_sizes[cid]
-            steps_of[cid] = m["n_batches"]
-            uploads.append((cid, params_k, w, lm))
-            results.append((params_k, w, m))
+            upd = PL.ClientUpdate(int(cid), PL.delta_tree(params_k, bc),
+                                  weight=w, votes=lm,
+                                  n_steps=m["n_batches"])
+            enc = pipe.encode(upd, masks_np)
+            up += enc.nbytes
+            encoded.append(enc)
+            results.append((w, m))
 
-        # ---- FedAvg: on-device psum unless a client took a side path -----
+        # ---- aggregation: on-device psum unless a side path was taken ----
         protocol_s = 0.0
         if private:
             # secagg / DP: masked field aggregation with dropout *recovery*
@@ -194,35 +175,38 @@ def run_cohort(model, strategy, parts, train, test, fc,
             # survivor shares, not silently excluded; an all-dropped round
             # still pays — and records — the advertise/share phases)
             trainable, masks, masks_np, agg = SV._private_round(
-                strategy, bc, uploads, sel, masks, masks_np, fc, rnd,
-                history, accountant)
-            up = agg.up_bytes + sum(up_sizes.values())
+                strategy, bc, encoded, sel, masks, masks_np, fc, rnd,
+                history, accountant, pipe)
+            up = agg.up_bytes + sum(e.nbytes for e in encoded)
             down += agg.down_bytes
             protocol_s = agg.time_s
         elif results:
-            if codec is None and cohort is not None and not cohort.fallback:
+            if pipe.codec is None and cohort is not None \
+                    and not cohort.fallback:
+                # identity wire: the on-device psum FedAvg equals the
+                # pipeline's delta-space mean (Σŵ(bc+Δ) = bc + ΣŵΔ)
                 trainable = avg
             else:
-                trainable = SV.fedavg([r[0] for r in results],
-                                      [r[1] for r in results])
+                trainable = pipe.aggregate(bc, encoded)
             trainable, masks, masks_np = SV._arbitrate(
                 strategy, trainable, local_masks, masks, masks_np, rnd)
 
         # ---- simulated wall clock (barrier = slowest surviving client) --
+        enc_of = {e.cid: e for e in encoded}
         costs = []
         for k, cid in enumerate(sel):
             if drops[k]:
                 continue
             cid = int(cid)
-            link = T.link_for(device_of(cid))
-            costs.append(_compute_s(cid, fc, steps_of[cid], slows[k])
-                         + link.transfer_s(down_per + up_sizes[cid]))
+            costs.append(pipe.client_time(
+                cid, down_per, enc_of[cid].nbytes,
+                _compute_s(cid, fc, enc_of[cid].n_steps, slows[k])))
         round_s = (max(costs) if costs else 0.0) + protocol_s
         history["sim_time_s"] += round_s
 
         live = int(MK.count_true(masks_np)) if masks_np else n_rank_units
         n_dead = len(PR.dead_modules(masks_np)) if masks_np else 0
-        loss = (float(np.mean([r[2]["loss"] for r in results]))
+        loss = (float(np.mean([r[1]["loss"] for r in results]))
                 if results else float("nan"))
         log = SV.RoundLog(rnd, int(down), int(up), live,
                           dead_modules=n_dead,
@@ -259,9 +243,7 @@ def run_async(model, strategy, parts, train, test, fc,
     base, trainable, masks, masks_np, n_rank_units, opt, rng = \
         SV._init_run(model, strategy, fc)
     step_fn = CL.make_train_step(model, opt, fc.task)
-    codec = None if fc.codec == "identity" else T.make_codec(fc.codec)
-    ef_up = T.ErrorFeedback(codec) if codec else None
-    ef_down = T.ErrorFeedback(codec) if codec else None
+    pipe = PL.UploadPipeline(fc, strategy)
     ev_rng = _event_rng(fc)
 
     logs: list[SV.RoundLog] = []
@@ -290,15 +272,9 @@ def run_async(model, strategy, parts, train, test, fc,
         cid = int(rng.integers(len(parts)))
         dropped = bool(ev_rng.random() < fc.dropout)
         slow = (fc.straggler_slow if ev_rng.random() < fc.straggler else 1.0)
-        if codec:
-            wire = T.flatten_update(trainable, masks_np)
-            dec, nb = ef_down.roundtrip(("down", cid), wire)
-            bc = _cast_like(T.unflatten_update(dec, trainable, masks_np),
-                            trainable)
-            down = nb + T.mask_wire_bytes(masks_np)
-        else:
-            bc = trainable
-            down = strategy.comm_down(trainable, masks_np)
+        # per-client DeltaChannel: a stale client's broadcast stream is
+        # delta-coded against *its own* last reconstruction
+        bc, down = pipe.broadcast(trainable, masks_np, endpoint=cid)
         pend_down += down
         n_b = _n_local_batches(len(parts[cid]), fc)
         link = T.link_for(device_of(cid))
@@ -334,30 +310,23 @@ def run_async(model, strategy, parts, train, test, fc,
             fc.max_local_batches * fc.local_epochs)
         params_k, grads_k, m = CL.local_train(
             step_fn, base, bc, d_masks, gate, opt, gen)
-        delta = jax.tree.map(lambda a, b: (a - b).astype(a.dtype),
-                             params_k, bc)
-        if codec:
-            wire = T.flatten_update(delta, d_masks_np)
-            dec, nb = ef_up.roundtrip(cid, wire)
-            delta = _cast_like(T.unflatten_update(dec, delta, d_masks_np),
-                               delta)
-            up = nb + T.mask_wire_bytes(d_masks_np)
-        else:
-            up = strategy.comm_up(params_k, d_masks_np)
-        pend_up += up
         staleness = version - d_version
         w = len(parts[cid]) * (1.0 + staleness) ** -fc.staleness_alpha
-        buffer.append((delta, params_k, grads_k, m, w, staleness))
+        upd = PL.ClientUpdate(cid, PL.delta_tree(params_k, bc), weight=w,
+                              n_steps=m["n_batches"],
+                              staleness=float(staleness))
+        enc = pipe.encode(upd, d_masks_np)
+        pend_up += enc.nbytes
+        buffer.append((enc, params_k, grads_k, m))
         history["events"].append((round(now, 9), "update", cid, d_version))
         dispatch(now)
 
         if len(buffer) >= buffer_k:
             # ---- staleness-weighted buffered aggregation -----------------
-            davg = SV.fedavg([b[0] for b in buffer], [b[4] for b in buffer])
-            trainable = jax.tree.map(
-                lambda p, d: (p.astype(jnp.float32)
-                              + d.astype(jnp.float32)).astype(p.dtype),
-                trainable, davg)
+            # (deltas were encoded against per-dispatch masks; averaging in
+            # tree space keeps stale and fresh contributions aligned)
+            trainable = pipe.aggregate(trainable,
+                                       [b[0] for b in buffer])
             local_masks = []
             if strategy.uses_masks():
                 for _, pk, gk, *_ in buffer:
@@ -376,7 +345,7 @@ def run_async(model, strategy, parts, train, test, fc,
                 trainable_params=PR.count_trainable(trainable),
                 loss=float(np.mean([b[3]["loss"] for b in buffer])),
                 sim_time_s=now,
-                staleness=float(np.mean([b[5] for b in buffer])))
+                staleness=float(np.mean([b[0].staleness for b in buffer])))
             history["comm_gb"] += (pend_down + pend_up) / 1e9
             pend_down = pend_up = 0
             if (agg + 1) % fc.eval_every == 0 or agg == fc.rounds - 1:

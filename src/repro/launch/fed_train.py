@@ -7,9 +7,11 @@ Usage:
 The fedsim engine is selected with ``--runner``: ``seq`` is the sequential
 oracle, ``cohort`` runs each round's local phase as one vmap+scan+shard_map
 dispatch over all devices, ``async`` runs FedBuff-style buffered aggregation
-on a simulated event clock.  ``--codec`` picks the quantized transport
-(int8 blockwise / top-k sparsification, both with error feedback) and
-``--straggler`` / ``--dropout`` inject client heterogeneity.
+on a simulated event clock.  ``--codec`` picks the delta-space transport
+codec (int8 blockwise / top-k sparsification / 1-bit signsgd / low-rank
+powersgd, all with error feedback on the client→server *delta* wire) and
+``--straggler`` / ``--dropout`` inject client heterogeneity.  ``--secagg``
+composes with field-exact codecs (``--codec signsgd``).
 """
 
 from __future__ import annotations
@@ -42,7 +44,10 @@ def main(argv=None):
     ap.add_argument("--runner", default="seq",
                     choices=["seq", "cohort", "async"])
     ap.add_argument("--codec", default="identity",
-                    choices=["identity", "int8", "topk"])
+                    choices=["identity", "int8", "topk", "signsgd",
+                             "powersgd"])
+    ap.add_argument("--powersgd-rank", type=int, default=2,
+                    help="q for --codec powersgd (q·(m+k) floats per wire)")
     ap.add_argument("--straggler", type=float, default=0.0,
                     help="P(client is a straggler); slowdown ×4")
     ap.add_argument("--dropout", type=float, default=0.0,
@@ -83,6 +88,7 @@ def main(argv=None):
     fc = FedConfig(rounds=args.rounds,
                    clients_per_round=args.clients_per_round, seed=args.seed,
                    runner=args.runner, codec=args.codec,
+                   powersgd_rank=args.powersgd_rank,
                    straggler=args.straggler, dropout=args.dropout,
                    buffer_k=args.buffer_k, event_seed=args.event_seed,
                    secagg=args.secagg,
@@ -116,6 +122,10 @@ def main(argv=None):
     if h.get("dp"):
         print(f"DP: ε={h['dp']['epsilon']:.3f} @ δ={h['dp']['delta']:g}  "
               f"(z={h['dp']['noise_multiplier']}, clip={h['dp']['clip']})")
+    if h.get("stage1"):
+        s1 = h["stage1"]
+        print(f"stage1: {s1['rounds']} rounds  up {s1['up_bytes'] / 1e6:.2f}"
+              f" MB  clipped {s1['n_clipped']}")
 
 
 if __name__ == "__main__":

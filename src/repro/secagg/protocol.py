@@ -22,12 +22,17 @@ client whose local vector is shorter than its peers' would otherwise leak its
 surviving rank count through the payload size — and the modular sum needs
 aligned shapes anyway.
 
-``aggregate_round`` is what the federated runners call: it turns per-client
-trainable trees into weighted delta wires (+ the client's weight and its
-one-hot rank votes as trailing field elements), runs the protocol, applies
-client-level DP (dp.py), and returns the new global trainable plus the
-secagg-summed vote vector for aggregate-only arbitration
-(``core.arbitration.arbitrate_from_votes``).
+``aggregate_round`` is what the delta pipeline calls
+(``fedsim.pipeline.UploadPipeline.aggregate_private``): it takes the
+pipeline's *encoded* client updates — delta wires that already passed the
+shared flatten → clip → codec → error-feedback stages — weights them (+ the
+client's weight and its one-hot rank votes as trailing field elements), runs
+the protocol, applies client-level DP noise (dp.py), and returns the new
+global trainable plus the secagg-summed vote vector for aggregate-only
+arbitration (``core.arbitration.arbitrate_from_votes``).  Field-exact codecs
+(signSGD's sign+scale wire) therefore compose with privacy: the field sums
+the codec's decoded deltas, and the pipeline snaps EF residuals to the field
+grid so client state never diverges from the masked aggregate.
 """
 
 from __future__ import annotations
@@ -213,36 +218,37 @@ def round_seed(fc, rnd: int) -> int:
     return fc.seed * 100_003 + rnd
 
 
-def aggregate_round(bc: Any, uploads: list[tuple[int, Any, float, Any]],
+def aggregate_round(bc: Any, uploads: list[Any],
                     participants: list[int], masks_np: Any, fc, rnd: int,
                     link_of: Callable[[int], T.Link] | None = None,
-                    ) -> PrivateAggregate:
-    """Privacy-preserving FedAvg over client *deltas*.
+                    unflatten: Callable | None = None) -> PrivateAggregate:
+    """Privacy-preserving FedAvg over *encoded* client deltas.
 
-    ``uploads`` holds surviving clients as (cid, params_tree, weight,
-    vote_tree|None); ``participants`` is everyone selected this round (the
-    extras are the dropouts whose masks need recovery).  The server learns
-    only the field aggregate: Σ w·Δ, Σ w, and the summed rank votes.
+    ``uploads`` holds surviving clients as ``fedsim.pipeline.EncodedUpdate``s
+    (attrs: cid, wire — the post-clip post-codec decoded delta wire —,
+    weight, votes, clipped); ``participants`` is everyone selected this round
+    (the extras are the dropouts whose masks need recovery).  Clipping
+    already happened in the pipeline's shared clip stage; this function only
+    counts it.  ``unflatten`` maps the averaged wire back onto ``bc`` (the
+    pipeline passes its own — the CommPru trainable wire for stage 2, the
+    sparse-gate base wire for SLoRA stage 1).  The server learns only the
+    field aggregate: Σ w·Δ, Σ w, and the summed rank votes.
     """
     if fc.dp_noise_multiplier > 0 and fc.dp_clip <= 0:
         raise ValueError("dp_noise_multiplier > 0 requires dp_clip > 0")
     dp_on = fc.dp_clip > 0
     use_field = fc.secagg != "off"
+    if unflatten is None:
+        unflatten = T.unflatten_update
 
-    wires, votes, n_clipped = {}, {}, 0
-    has_votes = any(u[3] is not None for u in uploads)
-    for cid, params_k, _, vt in uploads:
-        delta = jax.tree.map(
-            lambda a, b: np.asarray(jax.device_get(a), np.float32)
-            - np.asarray(jax.device_get(b), np.float32), params_k, bc)
-        w = T.flatten_update(delta, masks_np)
-        if dp_on:
-            w, norm = DP.clip_to_norm(w, fc.dp_clip)
-            n_clipped += int(norm > fc.dp_clip)
-        wires[cid] = w
+    wires, votes = {}, {}
+    n_clipped = sum(int(u.clipped) for u in uploads)
+    has_votes = any(u.votes is not None for u in uploads)
+    for u in uploads:
+        wires[u.cid] = np.asarray(u.wire, np.float32)
         if has_votes:
-            vflat, _ = IMP.flat_concat(MK.jax_to_np(vt))
-            votes[cid] = vflat.astype(np.float32)
+            vflat, _ = IMP.flat_concat(MK.jax_to_np(u.votes))
+            votes[u.cid] = vflat.astype(np.float32)
 
     # uniform weights under DP (bounded per-client sensitivity; element
     # magnitudes are safe because validation pins dp_clip ≤ field clip);
@@ -255,7 +261,7 @@ def aggregate_round(bc: Any, uploads: list[tuple[int, Any, float, Any]],
     if dp_on:
         w_norm = {cid: 1.0 for cid in wires}
     else:
-        sel_w = {int(c): float(w) for c, _, w, _ in uploads}
+        sel_w = {int(u.cid): float(u.weight) for u in uploads}
         mean_w = (float(np.mean(list(sel_w.values()))) or 1.0) \
             if sel_w else 1.0
         w_norm = {cid: w / mean_w for cid, w in sel_w.items()}
@@ -305,7 +311,7 @@ def aggregate_round(bc: Any, uploads: list[tuple[int, Any, float, Any]],
         noise_std = fc.dp_noise_multiplier * fc.dp_clip
 
     avg = sum_wire / max(sum_w, 1e-9)
-    d_tree = T.unflatten_update(avg, bc, masks_np)
+    d_tree = unflatten(avg, bc, masks_np)
     trainable = jax.tree.map(
         lambda p, d: (jnp.asarray(p, jnp.float32)
                       + jnp.asarray(d, jnp.float32)).astype(p.dtype),

@@ -19,6 +19,13 @@ if settings is not None:
     settings.load_profile("ci")
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: subprocess-heavy multi-device tests (deselect on starved "
+        "containers with -m 'not slow')")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -163,6 +163,8 @@ def test_error_feedback_compensates():
 
 def test_codec_registry():
     assert T.make_codec("int8", block=64).block == 64
+    assert T.make_codec("signsgd").name == "signsgd"
+    assert T.make_codec("powersgd").name == "powersgd"
     with pytest.raises(ValueError):
         T.make_codec("nope")
 

@@ -1,16 +1,25 @@
 """Multi-device MoE correctness: the expert-parallel shard_map paths (ZeRO-3
 weight-gather mode and token-replicated decode mode) must match the
 single-device reference.  Runs in a subprocess because the 8-device host
-platform must be configured before jax initializes."""
+platform must be configured before jax initializes.
+
+Marked ``slow`` (deselect with ``-m "not slow"`` on starved containers).
+Slow-CPU-container hardening: the model is shrunk below the smoke config
+(d_model 64, batch 4), the fake-device count halved to 4 on a (2,2) mesh
+(2 experts per model shard still exercises both paths — an 8-thread XLA
+collective rendezvous on a 2-core host degrades catastrophically under any
+concurrent load), and the subprocess timeout raised to 900 s."""
 
 import os
 import subprocess
 import sys
 import textwrap
 
+import pytest
+
 SCRIPT = textwrap.dedent("""
     import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np
     from repro.configs import get_config
     from repro.models import Ctx, Model
@@ -19,7 +28,8 @@ SCRIPT = textwrap.dedent("""
     from repro.pytree import materialize
 
     cfg = get_config("granite_moe_1b_a400m", smoke=True)  # 4 experts top-2
-    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = cfg.with_(d_model=64, d_ff=32)     # below-smoke: fast compile
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
     rules = dict(SH.DEFAULT_RULES)
     model = Model(cfg, peft="bea")
     meta = MOE.moe_meta(cfg)
@@ -31,7 +41,7 @@ SCRIPT = textwrap.dedent("""
     masks = {k: jnp.ones(v["A"].shape[-2], bool) for k, v in ad.items()}
     rng = np.random.default_rng(0)
     for seq, label in [(8, "gather"), (1, "replicated")]:
-        x = jnp.asarray(rng.normal(size=(8, seq, cfg.d_model)) * 0.3,
+        x = jnp.asarray(rng.normal(size=(4, seq, cfg.d_model)) * 0.3,
                         jnp.float32)
         y_ref, aux_ref = MOE._moe_local(x, w, ad, masks, cfg,
                                         cfg.n_experts, 0, None, ())
@@ -50,11 +60,12 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_moe_parallel_paths_match():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     env.pop("JAX_PLATFORMS", None)
     r = subprocess.run([sys.executable, "-c", SCRIPT], env=env, cwd=".",
-                       capture_output=True, text=True, timeout=420)
+                       capture_output=True, text=True, timeout=900)
     assert r.returncode == 0, r.stdout + r.stderr
     assert "OK" in r.stdout

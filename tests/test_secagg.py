@@ -4,7 +4,8 @@ parity on a real FedARA run.
 
 The integration tests honor ``SECAGG_DROPOUT`` (CI runs a {0.0, 0.3} matrix
 with fixed ``(seed, event_seed)`` so the dropout draws — and therefore the
-recovery traffic — are pinned)."""
+recovery traffic — are pinned) and ``SECAGG_CODEC`` (CI re-runs the suite
+once with ``signsgd`` to pin the privacy+compression composition)."""
 
 import os
 
@@ -13,6 +14,7 @@ import pytest
 
 from tests._hyp import given, settings, st
 
+from repro.fedsim import pipeline as PL
 from repro.fedsim import transport as T
 from repro.secagg import dp as DP
 from repro.secagg import masking as MSK
@@ -20,6 +22,7 @@ from repro.secagg import protocol as P
 from repro.secagg.field import FieldSpec, sum_encoded
 
 DROPOUT = float(os.environ.get("SECAGG_DROPOUT", "0.3"))
+CODEC = os.environ.get("SECAGG_CODEC", "identity")
 
 
 def _wires(n, size, seed=0, scale=1.0):
@@ -286,6 +289,7 @@ def _run(setup, **fc_kw):
     from repro.models import Model
     cfg, train, test, parts = setup
     rounds = fc_kw.pop("rounds", 3)
+    fc_kw.setdefault("codec", CODEC)
     strat = all_strategies(rounds=rounds)[fc_kw.pop("strategy", "fedara")]
     if hasattr(strat, "total_rounds"):
         strat.total_rounds, strat.warmup_rounds = rounds, 1
@@ -298,27 +302,52 @@ def _run(setup, **fc_kw):
 
 
 def test_secagg_matches_plain_fedavg(setup):
-    """Acceptance: zero-dropout secagg reproduces plain FedAvg global
-    adapters to fixed-point tolerance, with identical masks (the
-    aggregate-only arbitration path) and identical losses."""
+    """Acceptance: zero-dropout secagg reproduces the plain run's global
+    adapters to fixed-point tolerance, with identical losses — under the
+    identity wire AND under a field-exact codec (SECAGG_CODEC=signsgd pins
+    the privacy+compression composition: the field sums the same decoded
+    sign+scale deltas the plain run averages)."""
     import jax
     h0 = _run(setup)
     h1 = _run(setup, secagg="mask")
     assert h0["rounds"][0].loss == h1["rounds"][0].loss   # same round-0 start
+    # identity: only fixed-point noise; signsgd: the EF residual is also
+    # snapped to the field grid, so later rounds drift a touch more
+    rtol = 1e-4 if CODEC == "identity" else 1e-3
     for a, b in zip(h0["rounds"], h1["rounds"]):
-        # fixed-point noise in the aggregate perturbs later rounds' starts
-        np.testing.assert_allclose(a.loss, b.loss, rtol=1e-4)
-        assert a.live_ranks == b.live_ranks
+        np.testing.assert_allclose(a.loss, b.loss, rtol=rtol)
         assert b.up_bytes > a.up_bytes          # protocol overhead is real
+    atol = 1e-3 if CODEC == "identity" else 3e-3
     for x, y in zip(jax.tree.leaves(h0["trainable"]),
                     jax.tree.leaves(h1["trainable"])):
         assert np.abs(np.asarray(x, np.float32)
-                      - np.asarray(y, np.float32)).max() <= 1e-3
-    for x, y in zip(jax.tree.leaves(h0["masks"]),
-                    jax.tree.leaves(h1["masks"])):
-        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+                      - np.asarray(y, np.float32)).max() <= atol
+    if CODEC == "identity":
+        for a, b in zip(h0["rounds"], h1["rounds"]):
+            assert a.live_ranks == b.live_ranks
+        for x, y in zip(jax.tree.leaves(h0["masks"]),
+                        jax.tree.leaves(h1["masks"])):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
     assert len(h1["secagg_rounds"]) == len(h1["rounds"])
     assert all(r["recovery_bytes"] == 0 for r in h1["secagg_rounds"])
+
+
+def test_secagg_signsgd_matches_plain_signsgd(setup):
+    """Acceptance (always on, independent of SECAGG_CODEC): the
+    secagg+signsgd zero-dropout aggregate matches the plain signsgd FedAvg
+    to fixed-point tolerance."""
+    import jax
+    h0 = _run(setup, strategy="fedlora", codec="signsgd")
+    h1 = _run(setup, strategy="fedlora", codec="signsgd", secagg="mask")
+    assert h0["rounds"][0].loss == h1["rounds"][0].loss
+    for a, b in zip(h0["rounds"], h1["rounds"]):
+        np.testing.assert_allclose(a.loss, b.loss, rtol=1e-3)
+    # fixed-point drift can flip a near-zero sign in a later round, which
+    # moves that element by one sign quantum (2·scale) — bounded, not 1e-3
+    for x, y in zip(jax.tree.leaves(h0["trainable"]),
+                    jax.tree.leaves(h1["trainable"])):
+        assert np.abs(np.asarray(x, np.float32)
+                      - np.asarray(y, np.float32)).max() <= 8e-3
 
 
 def test_cohort_secagg_dropout_matrix(setup):
@@ -351,7 +380,8 @@ def test_aggregate_round_weighted_parity_under_extreme_skew():
     """Client data-size ratios far beyond the per-element field clip must
     still decode to plain weighted FedAvg — the weight vector is rescaled
     as a whole (the normalizer cancels in Σw·Δ/Σw), never silently clipped
-    element-wise."""
+    element-wise.  Uploads enter as the pipeline's EncodedUpdates, the only
+    wire format aggregate_round accepts now."""
     import jax
     from repro.federated.server import FedConfig
     rng = np.random.default_rng(0)
@@ -361,9 +391,11 @@ def test_aggregate_round_weighted_parity_under_extreme_skew():
     weights = [4000.0, 10.0, 7.0]          # ratio ≈ 571 ≫ secagg_clip = 8
     trees = [jax.tree.map(lambda x: rng.normal(
         size=x.shape).astype(np.float32), like) for _ in weights]
-    ups = [(i, t, w, None) for i, (t, w) in enumerate(zip(trees, weights))]
-    agg = P.aggregate_round(bc, ups, [0, 1, 2], None,
-                            FedConfig(secagg="mask"), 0)
+    fc = FedConfig(secagg="mask")
+    pipe = PL.UploadPipeline(fc, strategy=None)
+    ups = [pipe.encode(PL.ClientUpdate(i, t, w), None)
+           for i, (t, w) in enumerate(zip(trees, weights))]
+    agg = P.aggregate_round(bc, ups, [0, 1, 2], None, fc, 0)
     wn = np.asarray(weights) / np.sum(weights)
     for path in ("A", "B"):
         want = np.sum([w * np.asarray(t["adapters"]["m"][path])
@@ -401,8 +433,10 @@ def test_privacy_config_validation():
     from repro.federated.server import FedConfig, validate_privacy_config
     with pytest.raises(ValueError):
         validate_privacy_config(FedConfig(secagg="mask", codec="int8"))
-    with pytest.raises(ValueError):        # DP aggregates exact deltas too
+    with pytest.raises(ValueError):        # DP needs field-exact codecs too
         validate_privacy_config(FedConfig(dp_clip=1.0, codec="topk"))
+    with pytest.raises(ValueError):        # low-rank decode isn't field-exact
+        validate_privacy_config(FedConfig(secagg="mask", codec="powersgd"))
     with pytest.raises(ValueError):
         validate_privacy_config(FedConfig(secagg="mask", runner="async"))
     with pytest.raises(ValueError):
@@ -410,4 +444,7 @@ def test_privacy_config_validation():
     with pytest.raises(ValueError):
         validate_privacy_config(FedConfig(secagg="bogus"))
     validate_privacy_config(FedConfig(secagg="mask", runner="cohort",
+                                      dp_clip=1.0, dp_noise_multiplier=1.0))
+    # the sign+scale wire is field-exact: privacy + compression composes
+    validate_privacy_config(FedConfig(secagg="mask", codec="signsgd",
                                       dp_clip=1.0, dp_noise_multiplier=1.0))
