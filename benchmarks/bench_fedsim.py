@@ -5,8 +5,11 @@ byte ratios + convergence-vs-bytes curves (identity / int8 / topk / signsgd
 The throughput comparison runs in a subprocess with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the shard_map cohort
 axis needs >1 device; CPU-only hosts fake them) and measures *steady-state*
-seconds/round by differencing a long and a short run — jit compile time
-cancels.  Clients are IID-partitioned so every cohort slot carries real work
+seconds/round from per-round ``perf_counter`` marks (one ``on_round``
+callback per round), dropping the warmup intervals where jit compile time
+lands and taking the median of the rest — see benchmarks/common.py
+``steady_state``.  Clients are IID-partitioned so every cohort slot carries
+real work
 (dirichlet skew creates sub-batch clients that fall back to the sequential
 path and padded slots that waste cohort compute — that regime is the
 round-robin fallback's job, not this benchmark's).
@@ -49,27 +52,37 @@ _SUB = textwrap.dedent("""
     test = make_classification(200, 20, cfg.vocab_size, 32, seed=2)
     parts = iid_partition(train.labels, 20, seed=0)
 
+    from benchmarks.common import steady_state
+
     def timed(runner, rounds, cpr, codec="identity"):
+        # steady-state s/round: perf_counter marks at run start and after
+        # every round; the first interval (jit compile) is dropped and the
+        # remaining intervals' median is the measurement.  run_federated
+        # fences with block_until_ready before its final timestamp.
         strat = all_strategies(rounds=rounds)["fedlora"]
         model = Model(cfg, peft=strat.peft, unroll=True)
         fc = FedConfig(rounds=rounds, clients_per_round=cpr, batch_size=16,
                        max_local_batches=4, eval_every=10**6, lr=3e-3,
                        runner=runner, codec=codec)
-        t0 = time.perf_counter()
-        h = run_federated(model, strat, parts, train, test, fc)
-        return time.perf_counter() - t0, h
+        marks = [time.perf_counter()]
+        h = run_federated(model, strat, parts, train, test, fc,
+                          on_round=lambda r, log:
+                          marks.append(time.perf_counter()))
+        round_s, n = steady_state(marks, warmup=1)
+        return round_s, n, h
 
     out = {"ndev": len(jax.devices()), "rows": []}
-    r_short, r_long = (1, 3) if quick else (2, 6)
+    r_bench = 3 if quick else 6
     for cpr in ([4] if quick else [2, 4, 8]):
         rec = {"cpr": cpr}
         for runner in ("seq", "cohort"):
-            ts, _ = timed(runner, r_short, cpr)
-            tl, _ = timed(runner, r_long, cpr)
-            rec[runner + "_round_s"] = (tl - ts) / (r_long - r_short)
-        # a non-positive difference is compile/scheduler noise, not a
-        # measurement — report NaN rather than a fabricated ratio
-        noisy = rec["seq_round_s"] <= 0 or rec["cohort_round_s"] <= 0
+            rs, n, _ = timed(runner, r_bench, cpr)
+            rec[runner + "_round_s"] = rs
+            rec[runner + "_samples"] = n
+        # noisy only when no steady-state samples survive the warmup drop
+        noisy = (rec["seq_samples"] == 0 or rec["cohort_samples"] == 0
+                 or not rec["seq_round_s"] > 0
+                 or not rec["cohort_round_s"] > 0)
         rec["noisy"] = noisy
         rec["speedup"] = (float("nan") if noisy
                           else rec["seq_round_s"] / rec["cohort_round_s"])
@@ -78,9 +91,9 @@ _SUB = textwrap.dedent("""
     # transport: bytes per round + convergence-vs-bytes under each codec
     # (cohort runner, same seeds → same client draws across codecs)
     out["codec"], out["convergence"] = {}, {}
-    r_conv = r_short if quick else r_long
+    r_conv = 2 if quick else r_bench
     for codec in ("identity", "int8", "topk", "signsgd", "powersgd"):
-        _, h = timed("cohort", r_conv, 4, codec)
+        _, _, h = timed("cohort", r_conv, 4, codec)
         out["codec"][codec] = h["comm_gb"] * 1e9 / r_conv
         cum = 0
         curve = []
@@ -90,9 +103,9 @@ _SUB = textwrap.dedent("""
         out["convergence"][codec] = curve
 
     # async: simulated time + events per aggregation round
-    strat = all_strategies(rounds=r_long)["fedlora"]
+    strat = all_strategies(rounds=r_bench)["fedlora"]
     model = Model(cfg, peft=strat.peft, unroll=True)
-    fc = FedConfig(rounds=r_long, clients_per_round=4, batch_size=16,
+    fc = FedConfig(rounds=r_bench, clients_per_round=4, batch_size=16,
                    max_local_batches=4, eval_every=10**6, lr=3e-3,
                    runner="async", buffer_k=4, straggler=0.25)
     t0 = time.perf_counter()

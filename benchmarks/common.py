@@ -96,6 +96,35 @@ def run(name: str, ds: str = "syn20news", dist: str = "dir0.1",
     return h
 
 
+def timeit(fn, *args, warmup: int = 2, iters: int = 5):
+    """Steady-state seconds/call: ``warmup`` fenced calls absorb jit
+    compilation, then each timed call is fenced with block_until_ready so
+    async dispatch can't leak work past the clock.  Returns
+    (median_s, raw_times)."""
+    import jax
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), times
+
+
+def steady_state(marks, warmup: int = 1):
+    """Per-interval seconds from a list of perf_counter marks (e.g. one per
+    federated round), dropping the first ``warmup`` intervals where jit
+    compile time lands.  Returns (median_s, n_samples); (nan, 0) when no
+    steady samples remain — callers should report that as noisy rather
+    than fabricate a ratio."""
+    diffs = np.diff(np.asarray(marks, np.float64))
+    steady = diffs[warmup:]
+    if len(steady) == 0:
+        return float("nan"), 0
+    return float(np.median(steady)), int(len(steady))
+
+
 def row(name: str, value, **derived) -> str:
     dv = ";".join(f"{k}={v}" for k, v in derived.items())
     return f"{name},{value},{dv}"

@@ -85,8 +85,11 @@ def local_train(step_fn, base, trainable, masks, gate, opt, data_batches
         jb = {k: jnp.asarray(v) for k, v in batch.items()}
         params, opt_state, grads, _, loss, metric = step_fn(
             base, params, opt_state, masks, gate, jb)
-        losses.append(float(loss))
-        metrics.append(float(metric))
+        losses.append(loss)
+        metrics.append(metric)
+    # one device→host transfer after the loop keeps dispatch async
+    losses = [float(x) for x in jax.device_get(losses)]
+    metrics = [float(x) for x in jax.device_get(metrics)]
     return params, grads, {
         "loss": float(np.mean(losses)) if losses else float("nan"),
         "metric": float(np.mean(metrics)) if metrics else float("nan"),

@@ -121,21 +121,23 @@ def evaluate(model, base, trainable, masks, test: Dataset, fc: FedConfig):
     derived from the dataset's token stream)."""
     ev = CL.make_eval_step(model, fc.task)
     rng = np.random.default_rng(0)
-    correct, total, nlls = 0.0, 0, []
+    total, vals = 0, []
     for i, batch in enumerate(batches(test, fc.batch_size, rng)):
         if i >= fc.eval_batches:
             break
         if fc.task == "cls":
             jb = {k: jnp.asarray(v) for k, v in batch.items()}
-            correct += float(ev(base, trainable, masks, jb))
+            vals.append(ev(base, trainable, masks, jb))
             total += len(batch["labels"])
         else:
             toks = jnp.asarray(batch["tokens"])
             jb = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
-            nlls.append(float(ev(base, trainable, masks, jb)))
+            vals.append(ev(base, trainable, masks, jb))
+    # device scalars accumulate without blocking dispatch; one transfer here
+    vals = [float(v) for v in jax.device_get(vals)]
     if fc.task == "cls":
-        return correct / max(total, 1)
-    return float(np.mean(nlls)) if nlls else float("nan")
+        return sum(vals) / max(total, 1)
+    return float(np.mean(vals)) if vals else float("nan")
 
 
 # ---------------------------------------------------------------------------
@@ -146,7 +148,8 @@ def _init_run(model, strategy, fc: FedConfig):
     """Common run state: init params, masks, optimizer, selection stream."""
     key = jax.random.key(fc.seed)
     base, trainable = model.init(key)
-    base, trainable = strategy.post_init(model, base, trainable, key)
+    base, trainable = strategy.post_init(model, base, trainable,
+                                         jax.random.fold_in(key, 1))
     masks = model.init_masks() if strategy.uses_masks() else None
     masks_np = MK.jax_to_np(masks) if masks else None
     n_rank_units = MK.total_ranks(masks_np) if masks_np else 0

@@ -127,6 +127,19 @@ def run_cohort(model, strategy, parts, train, test, fc,
                 cohort.step_mask, cohort.weights)
             lc, mc = np.asarray(lc, np.float32), np.asarray(mc, np.float32)
             cohort_idx = {cid: i for i, cid in enumerate(cohort.cids)}
+            # One batched device→host pull for the whole cohort; the
+            # per-client params/deltas below are host-side slices of these,
+            # not C separate per-leaf transfers inside the client loop.
+            pc_host = jax.tree.map(
+                lambda a: np.asarray(jax.device_get(a)), pc)
+            bc_host = jax.tree.map(
+                lambda a: np.asarray(jax.device_get(a)), bc)
+            dc = jax.tree.map(
+                lambda p, b: np.asarray(p, np.float32)
+                - np.asarray(b, np.float32), pc_host, bc_host)
+            gc_host = jax.tree.map(
+                lambda a: np.asarray(jax.device_get(a)), gc) \
+                if strategy.uses_masks() and gc is not None else None
 
         results, local_masks, encoded = [], [], []
         up = 0
@@ -134,8 +147,10 @@ def run_cohort(model, strategy, parts, train, test, fc,
             if cid in cohort_idx:
                 i = cohort_idx[cid]
                 sm = cohort.step_mask[i]
-                params_k = CH.slice_client(pc, i)
-                grads_k = CH.slice_client(gc, i)
+                params_k = CH.slice_client(pc_host, i)
+                grads_k = CH.slice_client(gc_host, i) \
+                    if gc_host is not None else None
+                delta_k = CH.slice_client(dc, i)
                 m = {"loss": float(np.mean(lc[i][sm])) if sm.any()
                      else float("nan"),
                      "metric": float(np.mean(mc[i][sm])) if sm.any()
@@ -152,6 +167,7 @@ def run_cohort(model, strategy, parts, train, test, fc,
                     fc.max_local_batches * fc.local_epochs)
                 params_k, grads_k, m = CL.local_train(
                     step_fn, base, bc, masks, gate, opt, gen)
+                delta_k = PL.delta_tree(params_k, bc)
                 w = float(len(parts[cid]))
             lm = None
             if strategy.uses_masks():
@@ -159,7 +175,7 @@ def run_cohort(model, strategy, parts, train, test, fc,
                     rnd, params_k["adapters"],
                     (grads_k or {}).get("adapters"), n_rank_units)
                 local_masks.append(lm)
-            upd = PL.ClientUpdate(int(cid), PL.delta_tree(params_k, bc),
+            upd = PL.ClientUpdate(int(cid), delta_k,
                                   weight=w, votes=lm,
                                   n_steps=m["n_batches"])
             enc = pipe.encode(upd, masks_np)

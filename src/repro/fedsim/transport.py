@@ -269,7 +269,8 @@ class ErrorFeedback:
         w = np.asarray(wire, np.float32)
         r = self._resid.get(key)
         x = w + r if r is not None and r.shape == w.shape else w
-        payload, nbytes = self.codec.encode(x, key=key)
+        # ``key`` here is the endpoint id, not a PRNG key
+        payload, nbytes = self.codec.encode(x, key=key)  # lint: disable=RL1
         dec = self.codec.decode(payload, x.size)
         self._resid[key] = x - dec
         return dec, nbytes

@@ -30,7 +30,12 @@ from repro.models import Model
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog="Contributions to the federated wire path are gated by the "
+               "repro.lint static-analysis pass (rng hygiene, host-sync/"
+               "retrace hazards, privacy pipeline invariants): "
+               "`python -m repro.lint src/ --baseline lint_baseline.json`; "
+               "`--list-rules` documents the rule registry.")
     ap.add_argument("--strategy", default="fedara",
                     choices=list(all_strategies()))
     ap.add_argument("--rounds", type=int, default=20)

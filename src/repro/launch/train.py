@@ -72,7 +72,8 @@ def main(argv=None):
         trainable, opt_state, metrics = step(base, trainable, opt_state,
                                              masks, batch)
         if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
-            print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
+            # deliberate sync point: progress log every 10% of steps
+            print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "  # lint: disable=RL2
                   f"({time.time() - t0:.1f}s)", flush=True)
     print(f"done: {args.steps} steps in {time.time() - t0:.1f}s")
 

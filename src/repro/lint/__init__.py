@@ -1,0 +1,126 @@
+"""repro.lint — AST static analysis for this repo's JAX + privacy invariants.
+
+Usage:
+    PYTHONPATH=src python -m repro.lint src/ --baseline lint_baseline.json
+
+The pass is stdlib-only (``ast``) so it runs in CI jobs without jax.  Rules
+register themselves with :func:`rule`; each is a callable taking a
+:class:`~repro.lint.analysis.ModuleCtx` and yielding :class:`Finding`s.
+
+Suppression: append ``# lint: disable=RL1,RL2`` (or a bare
+``# lint: disable``) to the offending line.
+
+Baseline: ``--write-baseline`` snapshots current findings keyed by
+``rule::path::message`` (line-churn tolerant); subsequent runs with
+``--baseline`` fail only on findings not in the snapshot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+from typing import Callable, Iterable, Iterator
+
+from .analysis import ModuleCtx
+
+__all__ = ["Finding", "rule", "all_rules", "lint_source", "lint_paths",
+           "ModuleCtx"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str          # "RL1"
+    path: str          # repo-relative, forward slashes
+    line: int
+    col: int
+    msg: str
+
+    @property
+    def baseline_key(self) -> str:
+        return f"{self.rule}::{self.path}::{self.msg}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.msg}"
+
+
+@dataclasses.dataclass(frozen=True)
+class _Rule:
+    id: str
+    name: str
+    doc: str
+    check: Callable[[ModuleCtx], Iterable[Finding]]
+
+
+_REGISTRY: dict[str, _Rule] = {}
+
+
+def rule(id: str, name: str, doc: str):
+    """Register a rule.  ``doc`` is the one-liner shown by --list-rules."""
+    def deco(fn: Callable[[ModuleCtx], Iterable[Finding]]):
+        _REGISTRY[id] = _Rule(id, name, doc, fn)
+        return fn
+    return deco
+
+
+def all_rules() -> list[_Rule]:
+    from . import rules  # noqa: F401  (side-effect registration)
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+
+
+_SUPPRESS = re.compile(r"#\s*lint:\s*disable(?:=([A-Za-z0-9_,\s]+))?")
+
+
+def _suppressed(ctx: ModuleCtx, f: Finding) -> bool:
+    if not (1 <= f.line <= len(ctx.lines)):
+        return False
+    m = _SUPPRESS.search(ctx.lines[f.line - 1])
+    if not m:
+        return False
+    if m.group(1) is None:
+        return True
+    ids = {s.strip() for s in m.group(1).split(",")}
+    return f.rule in ids
+
+
+def lint_source(path: str, source: str,
+                only: set[str] | None = None) -> list[Finding]:
+    """Lint one module's source; ``path`` is used for reporting."""
+    try:
+        ctx = ModuleCtx(path, source)
+    except SyntaxError as e:
+        return [Finding("RL0", path, e.lineno or 1, e.offset or 0,
+                        f"syntax error: {e.msg}")]
+    out: list[Finding] = []
+    for r in all_rules():
+        if only is not None and r.id not in only:
+            continue
+        for f in r.check(ctx):
+            if not _suppressed(ctx, f):
+                out.append(f)
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return out
+
+
+def iter_py_files(paths: Iterable[str]) -> Iterator[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+        else:
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                for fn in sorted(files):
+                    if fn.endswith(".py"):
+                        yield os.path.join(root, fn)
+
+
+def lint_paths(paths: Iterable[str], root: str | None = None,
+               only: set[str] | None = None) -> list[Finding]:
+    root = root or os.getcwd()
+    out: list[Finding] = []
+    for fp in iter_py_files(paths):
+        rel = os.path.relpath(fp, root).replace(os.sep, "/")
+        with open(fp, encoding="utf-8") as fh:
+            out.extend(lint_source(rel, fh.read(), only=only))
+    return out

@@ -1,0 +1,67 @@
+"""CLI for repro.lint.
+
+    python -m repro.lint [paths] [--format human|json]
+                         [--baseline FILE | --write-baseline FILE]
+                         [--rules RL1,RL2] [--list-rules]
+
+Exit status: 0 when no (new) findings, 1 otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import all_rules, lint_paths
+from . import baseline as bl
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="AST static analysis for repro's JAX/privacy invariants.")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--format", choices=["human", "json"], default="human")
+    ap.add_argument("--baseline", metavar="FILE",
+                    help="only fail on findings not in this snapshot")
+    ap.add_argument("--write-baseline", metavar="FILE",
+                    help="snapshot current findings and exit 0")
+    ap.add_argument("--rules", metavar="IDS",
+                    help="comma-separated rule IDs to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule registry and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in all_rules():
+            print(f"{r.id:5s} {r.name:24s} {r.doc}")
+        return 0
+
+    only = {s.strip() for s in args.rules.split(",")} if args.rules else None
+    findings = lint_paths(args.paths or ["src"], only=only)
+
+    if args.write_baseline:
+        bl.save(args.write_baseline, findings)
+        print(f"wrote {len(findings)} finding(s) to {args.write_baseline}")
+        return 0
+
+    total = len(findings)
+    if args.baseline:
+        findings = bl.filter_new(findings, bl.load(args.baseline))
+
+    if args.format == "json":
+        print(json.dumps([f.__dict__ for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+        suffix = f" ({total} total, {total - len(findings)} baselined)" \
+            if args.baseline else ""
+        print(f"{len(findings)} new finding(s){suffix}"
+              if args.baseline else f"{len(findings)} finding(s){suffix}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

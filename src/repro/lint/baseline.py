@@ -1,0 +1,46 @@
+"""Committed-baseline gate: fail only on findings newer than the snapshot.
+
+The snapshot maps ``rule::path::message`` → count.  Keys deliberately omit
+line numbers so unrelated edits above a baselined finding don't break CI;
+a count increase (the same message appearing on more lines) still fails.
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+
+from . import Finding
+
+
+def load(path: str) -> dict[str, int]:
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+    return {str(k): int(v) for k, v in data.get("findings", {}).items()}
+
+
+def save(path: str, findings: list[Finding]) -> None:
+    counts = collections.Counter(f.baseline_key for f in findings)
+    payload = {
+        "comment": "repro.lint baseline — regenerate with "
+                   "`python -m repro.lint src/ --write-baseline "
+                   "lint_baseline.json`",
+        "findings": dict(sorted(counts.items())),
+    }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=False)
+        fh.write("\n")
+
+
+def filter_new(findings: list[Finding],
+               baseline: dict[str, int]) -> list[Finding]:
+    """Findings beyond the baselined count per key (oldest lines absorbed
+    first, so the *extra* occurrences are reported)."""
+    budget = dict(baseline)
+    out = []
+    for f in findings:  # already sorted by (path, line)
+        if budget.get(f.baseline_key, 0) > 0:
+            budget[f.baseline_key] -= 1
+        else:
+            out.append(f)
+    return out

@@ -1,0 +1,3 @@
+"""Rule modules self-register via repro.lint.rule on import."""
+
+from . import rng, hostsync, retrace, privacy, pallas  # noqa: F401

@@ -1,0 +1,250 @@
+"""RL2 — host synchronisation in hot paths.
+
+Two variants:
+
+*Inside traced functions* (reachable from jit/vmap/scan/shard_map —
+see analysis.ModuleCtx traced discovery): ``np.*`` on traced values,
+``float()``/``int()`` on tracers, ``.item()``, ``device_get``,
+``block_until_ready`` and ``print`` of tracers all either fail under trace
+or silently force a transfer.
+
+*Inside host-side loops* of jax-using modules (round loops, eval loops):
+per-iteration ``.item()``, per-iteration ``device_get``/``delta_tree`` of
+loop-invariant device data, and ``float()``/``int()`` applied to the result
+of a jitted dispatch serialize the dispatch pipeline — the ROADMAP's
+"host round-trips" cost.  The fix is to accumulate on device (or slice a
+single batched transfer) and convert once after the loop.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .. import Finding, rule
+from ..analysis import ModuleCtx, dotted_name, names_in, target_names
+
+TRANSFER_TAILS = {"device_get", "block_until_ready", "delta_tree"}
+SLICER_TAILS = {"slice_client"}
+
+
+def _tail(ctx: ModuleCtx, call: ast.Call) -> str:
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    q = ctx.call_qual(call)
+    return (q or "").rpartition(".")[2]
+
+
+# ---------- traced-function variant ----------------------------------------
+
+def _check_traced(ctx: ModuleCtx, f):
+    env = f.env or {}
+
+    def traced(e):
+        return ctx.expr_kind(e, env) == "traced"
+
+    for call in ctx.calls(f.node):
+        if ctx.func_of(call) is not f:
+            continue
+        q = ctx.call_qual(call) or ""
+        tail = _tail(ctx, call)
+        args = list(call.args) + [kw.value for kw in call.keywords]
+        where = f"in traced function '{f.qualpath}'"
+        if q.split(".")[0] == "numpy" and any(traced(a) for a in args):
+            yield Finding("RL2", ctx.path, call.lineno, call.col_offset,
+                          f"numpy call '{q}' on a traced value {where}; "
+                          f"use jax.numpy")
+        elif q in ("float", "int", "bool") and args and traced(args[0]):
+            yield Finding("RL2", ctx.path, call.lineno, call.col_offset,
+                          f"{q}() forces a host sync on a traced value "
+                          f"{where}")
+        elif tail == "item" and isinstance(call.func, ast.Attribute) \
+                and traced(call.func.value):
+            yield Finding("RL2", ctx.path, call.lineno, call.col_offset,
+                          f".item() forces a host sync {where}")
+        elif tail in ("device_get", "block_until_ready") \
+                and ("jax" in q or isinstance(call.func, ast.Attribute)):
+            yield Finding("RL2", ctx.path, call.lineno, call.col_offset,
+                          f"{tail}() {where} defeats the trace")
+        elif q == "print" and any(traced(a) for a in args):
+            yield Finding("RL2", ctx.path, call.lineno, call.col_offset,
+                          f"print() of a traced value {where}; "
+                          f"use jax.debug.print")
+
+
+# ---------- host-loop variant ----------------------------------------------
+
+def _dispatch_names(ctx: ModuleCtx, f) -> set[str]:
+    """Names bound to jitted/step dispatch callables inside ``f``."""
+    out = set()
+    a = f.node.args
+    for p in a.posonlyargs + a.args + a.kwonlyargs:
+        if p.arg == "fn" or p.arg.endswith("_fn"):
+            out.add(p.arg)
+    for names, rhs, _ in ctx.assignments(f):
+        if not isinstance(rhs, ast.Call):
+            continue
+        inner = ctx.unwrap_partial(rhs.func) if isinstance(rhs.func, ast.Call)\
+            else rhs.func
+        q = ctx.qual(inner) or ctx.call_qual(rhs) or ""
+        tail = q.rpartition(".")[2]
+        if q == "jax.jit" or tail.startswith("make_"):
+            out.update(names)
+    return out
+
+
+def _in_loop(node: ast.AST, loop: ast.AST) -> bool:
+    cur = node
+    while cur is not None:
+        if cur is loop:
+            return True
+        cur = getattr(cur, "_lint_parent", None)
+    return False
+
+
+def _branch_sig(node: ast.AST, stop: ast.AST) -> dict[int, str]:
+    """{id(if-node): arm} chain from ``node`` up to ``stop`` — which arm of
+    each enclosing ``if`` the node sits in."""
+    sig: dict[int, str] = {}
+    prev, cur = node, getattr(node, "_lint_parent", None)
+    while cur is not None and cur is not stop:
+        if isinstance(cur, ast.If):
+            if any(prev is s or _is_ancestor(s, prev) for s in cur.body):
+                sig[id(cur)] = "body"
+            elif any(prev is s or _is_ancestor(s, prev)
+                     for s in cur.orelse):
+                sig[id(cur)] = "else"
+        prev, cur = cur, getattr(cur, "_lint_parent", None)
+    return sig
+
+
+def _is_ancestor(anc: ast.AST, node: ast.AST) -> bool:
+    cur = node
+    while cur is not None:
+        if cur is anc:
+            return True
+        cur = getattr(cur, "_lint_parent", None)
+    return False
+
+
+def _compatible(a: dict[int, str], b: dict[int, str]) -> bool:
+    """False when the two nodes sit in *different* arms of the same if —
+    the assignment can't reach the use."""
+    return all(a[k] == b[k] for k in a.keys() & b.keys())
+
+
+class _LoopChecker:
+    def __init__(self, ctx: ModuleCtx, f):
+        self.ctx = ctx
+        self.f = f
+        self.asgs = ctx.assignments(f)
+        self.dispatch = _dispatch_names(ctx, f)
+        self._use_sig: dict[int, str] | None = None
+
+    def _asgs_before(self, name: str, line: int):
+        return [(rhs, stmt) for names, rhs, stmt in self.asgs
+                if name in names and getattr(stmt, "lineno", 0) <= line]
+
+    def fresh(self, name: str, line: int, loop: ast.AST, depth=0) -> bool:
+        """True when ``name``'s data is produced inside this loop iteration
+        (slicing an outer array doesn't count — that is the transfer we
+        want hoisted).  Branches make the reaching definition ambiguous,
+        so *every* candidate binding must be iteration-fresh."""
+        if depth > 6:
+            return True
+        if isinstance(loop, ast.For) and name in target_names(loop.target):
+            return True
+        hits = self._asgs_before(name, line)
+        if not hits:
+            return False                      # param / outer scope
+        in_loop = [(rhs, stmt) for rhs, stmt in hits if _in_loop(stmt, loop)]
+        if not in_loop:
+            return False
+        if self._use_sig is not None:
+            reach = [(rhs, stmt) for rhs, stmt in in_loop
+                     if _compatible(_branch_sig(stmt, loop), self._use_sig)]
+            in_loop = reach or in_loop
+        return all(self._rhs_fresh(rhs, stmt, loop, depth)
+                   for rhs, stmt in in_loop)
+
+    def _rhs_fresh(self, rhs, stmt, loop, depth) -> bool:
+        if isinstance(rhs, ast.Name):
+            return self.fresh(rhs.id, stmt.lineno, loop, depth + 1)
+        if isinstance(rhs, ast.Subscript):
+            return all(self.fresh(n, stmt.lineno, loop, depth + 1)
+                       for n in names_in(rhs.value))
+        if isinstance(rhs, ast.Call):
+            if _tail(self.ctx, rhs) in SLICER_TAILS:
+                return all(self.fresh(n, stmt.lineno, loop, depth + 1)
+                           for n in names_in(ast.Tuple(elts=rhs.args,
+                                                       ctx=ast.Load())))
+            return True                       # freshly computed this iteration
+        return True
+
+    def _loop_assigned_from_dispatch(self, name: str, line: int,
+                                     loop: ast.AST) -> bool:
+        hits = [(rhs, stmt) for rhs, stmt in self._asgs_before(name, line)
+                if _in_loop(stmt, loop)]
+        if not hits:
+            return False
+        rhs = hits[-1][0]
+        return any(isinstance(c, ast.Call) and isinstance(c.func, ast.Name)
+                   and c.func.id in self.dispatch for c in ast.walk(rhs))
+
+    def run(self):
+        ctx, f = self.ctx, self.f
+        for call in ctx.calls(f.node):
+            if ctx.func_of(call) is not f:
+                continue
+            loop = ctx.enclosing_loop(call, f.node)
+            if loop is None:
+                continue
+            q = ctx.call_qual(call) or ""
+            tail = _tail(ctx, call)
+            if tail == "item" and isinstance(call.func, ast.Attribute):
+                yield Finding(
+                    "RL2", ctx.path, call.lineno, call.col_offset,
+                    f"per-iteration .item() in host loop of "
+                    f"'{f.qualpath}'; accumulate on device and convert "
+                    f"once after the loop")
+            elif tail in TRANSFER_TAILS:
+                arg_names = set()
+                for a in list(call.args) + [kw.value for kw in
+                                            call.keywords]:
+                    arg_names |= names_in(a)
+                arg_names.discard("self")
+                self._use_sig = _branch_sig(call, loop)
+                if arg_names and not any(
+                        self.fresh(n, call.lineno, loop)
+                        for n in arg_names):
+                    yield Finding(
+                        "RL2", ctx.path, call.lineno, call.col_offset,
+                        f"per-iteration {tail}() of loop-invariant device "
+                        f"data in '{f.qualpath}'; batch the device-to-host "
+                        f"transfer once outside the loop")
+            elif q in ("float", "int") and call.args:
+                arg = call.args[0]
+                direct = any(
+                    isinstance(c, ast.Call) and isinstance(c.func, ast.Name)
+                    and c.func.id in self.dispatch for c in ast.walk(arg))
+                via_name = any(
+                    self._loop_assigned_from_dispatch(n, call.lineno, loop)
+                    for n in names_in(arg))
+                if direct or via_name:
+                    yield Finding(
+                        "RL2", ctx.path, call.lineno, call.col_offset,
+                        f"{q}() on a jitted-dispatch result inside the "
+                        f"loop in '{f.qualpath}' serializes dispatch; "
+                        f"keep it on device and convert after the loop")
+
+
+@rule("RL2", "host-sync-in-hot-path",
+      "host transfer (.item()/float()/np.*/device_get) inside traced "
+      "functions or per-iteration in round loops")
+def check(ctx: ModuleCtx):
+    if not ctx.uses_jax:
+        return
+    for f in ctx.functions:
+        if f.traced:
+            yield from _check_traced(ctx, f)
+        else:
+            yield from _LoopChecker(ctx, f).run()

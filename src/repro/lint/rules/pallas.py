@@ -1,0 +1,206 @@
+"""RL5 — Pallas kernel structure checks (kernels/*.py and any module
+importing pallas).
+
+Checked per ``pl.pallas_call`` site:
+
+  - every ``BlockSpec`` index_map must take exactly one (non-defaulted)
+    parameter per grid axis — closure constants bound via lambda defaults
+    (``lambda h, i, j, g=group:``) are fine;
+  - the index_map's returned coordinate tuple must match the block shape's
+    rank;
+  - grid axes must be integers (``//``, not ``/``);
+  - an accumulator ref updated in place (``acc_ref[...] += ...`` or a
+    self-referencing assign) needs a ``pl.when``-guarded init, or the first
+    grid step reads uninitialized VMEM;
+  - when the out BlockSpec revisits blocks (its index_map ignores a grid
+    axis), plain writes to the out ref must sit behind a ``pl.when`` tail
+    guard (the ``k == k_steps - 1`` epilogue idiom).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .. import Finding, rule
+from ..analysis import ModuleCtx
+
+
+def _tail(ctx: ModuleCtx, call: ast.Call) -> str:
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    return (ctx.call_qual(call) or "").rpartition(".")[2]
+
+
+def _kw(call: ast.Call, name: str):
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _resolve_tuple(ctx: ModuleCtx, node: ast.AST, near: ast.AST):
+    """A tuple literal, directly or via a single local name assignment."""
+    if isinstance(node, ast.Tuple):
+        return node
+    if isinstance(node, ast.Name):
+        f = ctx.func_of(near)
+        pools = []
+        if f is not None:
+            pools.append(ctx.assignments(f))
+        for pool in pools:
+            for names, rhs, _ in pool:
+                if node.id in names and isinstance(rhs, ast.Tuple):
+                    return rhs
+    return None
+
+
+def _blockspecs(ctx: ModuleCtx, node: ast.AST):
+    if node is None:
+        return
+    if isinstance(node, (ast.List, ast.Tuple)):
+        for el in node.elts:
+            yield from _blockspecs(ctx, el)
+    elif isinstance(node, ast.Call) and _tail(ctx, node) == "BlockSpec":
+        yield node
+
+
+def _lambda_required(lam: ast.Lambda) -> list[str]:
+    a = lam.args
+    pos = a.posonlyargs + a.args
+    n_req = len(pos) - len(a.defaults)
+    return [p.arg for p in pos[:n_req]]
+
+
+def _when_guarded(node: ast.AST, ctx: ModuleCtx) -> bool:
+    """Is this statement inside a nested def decorated with pl.when?"""
+    cur = getattr(node, "_lint_parent", None)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in cur.decorator_list:
+                if isinstance(dec, ast.Call) and _tail(ctx, dec) == "when":
+                    return True
+        cur = getattr(cur, "_lint_parent", None)
+    return False
+
+
+def _ref_writes(ctx: ModuleCtx, kernel: ast.AST):
+    """(name, node, kind) for subscript writes to *_ref style names.
+    kind: 'aug' for accumulation (+= or self-referencing =), 'plain'."""
+    for node in ast.walk(kernel):
+        tgt = None
+        if isinstance(node, ast.AugAssign):
+            tgt, kind = node.target, "aug"
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt, kind = node.targets[0], "plain"
+        else:
+            continue
+        if not (isinstance(tgt, ast.Subscript)
+                and isinstance(tgt.value, ast.Name)):
+            continue
+        name = tgt.value.id
+        if kind == "plain":
+            # self-referencing assign = accumulation, but only a
+            # *subscript* read of the ref counts — zeros_like(acc_ref)
+            # uses the bare name for shape/dtype only
+            reads_self = any(
+                isinstance(n, ast.Subscript)
+                and isinstance(n.value, ast.Name) and n.value.id == name
+                for n in ast.walk(node.value))
+            kind = "aug" if reads_self else "plain"
+        yield name, node, kind
+
+
+@rule("RL5", "pallas-kernel",
+      "BlockSpec/grid arity and rank mismatches, unguarded accumulator "
+      "init, out-ref writes without a pl.when tail guard")
+def check(ctx: ModuleCtx):
+    if not ctx.uses_pallas:
+        return
+    for call in ctx.calls():
+        if _tail(ctx, call) != "pallas_call":
+            continue
+        grid = _resolve_tuple(ctx, _kw(call, "grid"), call)
+        grid_len = len(grid.elts) if grid is not None else None
+        if grid is not None:
+            for el in grid.elts:
+                if isinstance(el, ast.BinOp) and isinstance(el.op, ast.Div):
+                    yield Finding(
+                        "RL5", ctx.path, el.lineno, el.col_offset,
+                        "grid axis computed with float '/'; grid axes "
+                        "must be ints (use // after asserting "
+                        "divisibility)")
+        in_specs = _kw(call, "in_specs")
+        out_specs = _kw(call, "out_specs")
+        n_in = len(in_specs.elts) if isinstance(in_specs,
+                                                (ast.List, ast.Tuple)) \
+            else None
+        out_list = list(_blockspecs(ctx, out_specs))
+        n_out = len(out_list) if out_list else None
+
+        specs = list(_blockspecs(ctx, in_specs)) + out_list
+        out_revisits = False
+        for spec in specs:
+            shape = spec.args[0] if spec.args else None
+            lam = spec.args[1] if len(spec.args) > 1 else \
+                _kw(spec, "index_map")
+            if not isinstance(lam, ast.Lambda):
+                continue
+            req = _lambda_required(lam)
+            if grid_len is not None and len(req) != grid_len:
+                yield Finding(
+                    "RL5", ctx.path, lam.lineno, lam.col_offset,
+                    f"BlockSpec index_map takes {len(req)} grid indices "
+                    f"but the grid has {grid_len} axes")
+            if isinstance(shape, ast.Tuple) \
+                    and isinstance(lam.body, ast.Tuple) \
+                    and len(lam.body.elts) != len(shape.elts):
+                yield Finding(
+                    "RL5", ctx.path, lam.lineno, lam.col_offset,
+                    f"BlockSpec index_map returns "
+                    f"{len(lam.body.elts)} block coordinates for a "
+                    f"{len(shape.elts)}-d block shape")
+            if spec in out_list:
+                used = {n.id for n in ast.walk(lam.body)
+                        if isinstance(n, ast.Name)}
+                if any(p not in used for p in req):
+                    out_revisits = True
+
+        # kernel-body checks
+        kernel = ctx.unwrap_partial(call.args[0]) if call.args else None
+        fn = None
+        if isinstance(kernel, ast.Name):
+            fn = ctx._lookup_local_fn(kernel.id, call)
+        if fn is None:
+            continue
+        params = [p.arg for p in
+                  fn.node.args.posonlyargs + fn.node.args.args]
+        out_names = set()
+        if n_in is not None and n_out is not None:
+            out_names = set(params[n_in:n_in + n_out])
+        else:
+            out_names = {p for p in params
+                         if p in ("o_ref", "out_ref") or
+                         p.startswith("o_") or p.startswith("out_")}
+
+        writes = list(_ref_writes(ctx, fn.node))
+        plain_inits = {n for n, node, kind in writes if kind == "plain"}
+        for name in {n for n, _, kind in writes if kind == "aug"}:
+            has_init = name in plain_inits
+            if not has_init:
+                node = next(nd for n, nd, k in writes
+                            if n == name and k == "aug")
+                yield Finding(
+                    "RL5", ctx.path, node.lineno, node.col_offset,
+                    f"accumulator '{name}' updated in place in kernel "
+                    f"'{fn.qualpath}' without a pl.when-guarded init; "
+                    f"the first grid step reads uninitialized memory")
+        if out_revisits:
+            for name, node, kind in writes:
+                if name in out_names and kind == "plain" \
+                        and not _when_guarded(node, ctx):
+                    yield Finding(
+                        "RL5", ctx.path, node.lineno, node.col_offset,
+                        f"write to out ref '{name}' in kernel "
+                        f"'{fn.qualpath}' without a pl.when tail guard "
+                        f"while the out BlockSpec revisits blocks; guard "
+                        f"the epilogue on the last grid step")

@@ -1,0 +1,135 @@
+"""RL4 — privacy wire-path invariants.
+
+The DP accounting in repro.federated only holds if every client→server
+upload traverses the delta pipeline's stage order
+(flatten → error-feedback → DP-clip → codec → field-snap) and secure
+aggregation only composes with field-exact codecs.  These checks keep the
+invariants structural:
+
+  a. secagg entrypoints (``aggregate_round``/``run_round``) may only be
+     called from ``fedsim/pipeline.py`` (and the protocol module itself);
+  b. within a function, a codec ``encode`` must not precede ``clip_to_norm``
+     — encoding before the clip voids the L2 sensitivity bound;
+  c. non-field-exact codec constructions (Int8Block/TopK/PowerSGD, or
+     ``make_codec`` with their names) are flagged in secagg paths;
+  d. ``codec.encode(...)`` must pass an endpoint ``key=`` so error-feedback
+     and PowerSGD warm-start state is keyed per client/link;
+  e. ``ClientUpdate`` built in a function that never touches the upload
+     pipeline (no encode/aggregate/pipe reference) bypasses the stages.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .. import Finding, rule
+from ..analysis import ModuleCtx, dotted_name
+
+AGG_ALLOWLIST = ("fedsim/pipeline.py", "secagg/protocol.py")
+NON_FIELD_EXACT = {"Int8Block", "TopK", "PowerSGD"}
+NON_FIELD_EXACT_NAMES = {"int8", "topk", "powersgd"}
+PIPELINE_MARKERS = {"pipe", "pipeline", "encode", "aggregate", "upload"}
+
+
+def _tail(ctx: ModuleCtx, call: ast.Call) -> str:
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    return (ctx.call_qual(call) or "").rpartition(".")[2]
+
+
+def _is_codec_recv(call: ast.Call) -> bool:
+    """receiver spelled ``codec`` / ``*.codec`` / ``*_codec``."""
+    if not isinstance(call.func, ast.Attribute):
+        return False
+    d = dotted_name(call.func.value)
+    if d is None:
+        return False
+    last = d.rpartition(".")[2]
+    return last == "codec" or last.endswith("_codec")
+
+
+def _secagg_context(ctx: ModuleCtx, f) -> bool:
+    if "/secagg/" in ctx.path:
+        return True
+    n = (f.qualpath if f else "").lower()
+    return "private" in n or "secagg" in n
+
+
+@rule("RL4", "privacy-wire-path",
+      "uploads bypassing fedsim.pipeline, codec-before-clip order, "
+      "non-field-exact codecs in secagg paths, unkeyed EF/PowerSGD state")
+def check(ctx: ModuleCtx):
+    in_tests = ctx.path.startswith("tests/") or "/tests/" in ctx.path
+    # (a) secagg entrypoint bypass
+    if not ctx.path.endswith(AGG_ALLOWLIST) and not in_tests:
+        for call in ctx.calls():
+            t = _tail(ctx, call)
+            q = ctx.call_qual(call) or ""
+            if t in ("aggregate_round", "run_round") and "secagg" in q:
+                yield Finding(
+                    "RL4", ctx.path, call.lineno, call.col_offset,
+                    f"secure-aggregation entrypoint '{t}' called outside "
+                    f"fedsim.pipeline; route uploads through "
+                    f"UploadPipeline so clip/codec/field stages apply")
+
+    for f in ctx.functions:
+        encodes, clips, updates = [], [], []
+        for call in ctx.calls(f.node):
+            if ctx.func_of(call) is not f:
+                continue
+            t = _tail(ctx, call)
+            if t == "encode" and _is_codec_recv(call):
+                encodes.append(call)
+                # (d) endpoint key
+                if not any(kw.arg == "key" for kw in call.keywords):
+                    yield Finding(
+                        "RL4", ctx.path, call.lineno, call.col_offset,
+                        f"codec.encode() without an endpoint key= in "
+                        f"'{f.qualpath}'; error-feedback/PowerSGD state "
+                        f"must be keyed per client or link")
+            elif t == "clip_to_norm":
+                clips.append(call)
+            elif t == "ClientUpdate":
+                updates.append(call)
+            # (c) non-field-exact codecs in secagg paths
+            if _secagg_context(ctx, f) and not in_tests:
+                bad = None
+                if t in NON_FIELD_EXACT:
+                    bad = t
+                elif t == "make_codec" and call.args \
+                        and isinstance(call.args[0], ast.Constant) \
+                        and call.args[0].value in NON_FIELD_EXACT_NAMES:
+                    bad = call.args[0].value
+                if bad is not None:
+                    yield Finding(
+                        "RL4", ctx.path, call.lineno, call.col_offset,
+                        f"non-field-exact codec '{bad}' in secure-"
+                        f"aggregation path '{f.qualpath}'; masked field "
+                        f"sums require FIELD_EXACT codecs "
+                        f"(identity/signsgd)")
+        # (b) codec-before-clip stage order
+        if encodes and clips:
+            if min(c.lineno for c in encodes) < min(c.lineno for c in clips):
+                c = min(encodes, key=lambda c: c.lineno)
+                yield Finding(
+                    "RL4", ctx.path, c.lineno, c.col_offset,
+                    f"codec encode precedes DP clip in '{f.qualpath}'; "
+                    f"clip in delta space first or the sensitivity bound "
+                    f"is void")
+        # (e) ClientUpdate outside the pipeline
+        if updates and not in_tests \
+                and not ctx.path.endswith("fedsim/pipeline.py"):
+            words = set()
+            for node in ast.walk(f.node):
+                if isinstance(node, ast.Name):
+                    words.add(node.id.lower())
+                elif isinstance(node, ast.Attribute):
+                    words.add(node.attr.lower())
+            if not any(any(m in w for m in PIPELINE_MARKERS)
+                       for w in words):
+                c = updates[0]
+                yield Finding(
+                    "RL4", ctx.path, c.lineno, c.col_offset,
+                    f"ClientUpdate constructed in '{f.qualpath}' without "
+                    f"entering the upload pipeline; pass it through "
+                    f"UploadPipeline.encode so every stage applies")

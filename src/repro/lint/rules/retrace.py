@@ -1,0 +1,100 @@
+"""RL3 — retrace hazards in traced functions.
+
+Python control flow evaluated at trace time re-specializes on every distinct
+value: ``if``/``while`` on a traced argument raises a ConcretizationError or
+(for weakly-typed values) retraces per value; a Python ``for`` over a traced
+array unrolls it; an f-string on a tracer bakes ``Traced<...>`` garbage into
+the output; iterating a ``set`` in a traced body makes compilation-order
+nondeterministic.  Shape/dtype-derived values are static and exempt, as are
+``x is None`` guards (a trace-time constant) and parameters covered by
+``static_argnums``/``static_argnames``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .. import Finding, rule
+from ..analysis import ModuleCtx
+
+
+def _is_none_guard(test: ast.AST) -> bool:
+    if isinstance(test, ast.BoolOp):
+        return all(_is_none_guard(v) for v in test.values)
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _is_none_guard(test.operand)
+    if isinstance(test, ast.Compare):
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+            return True
+    return False
+
+
+def _unhashable_static_defaults(ctx: ModuleCtx, f):
+    a = f.node.args
+    pos = a.posonlyargs + a.args
+    defaults = dict(zip([p.arg for p in pos[len(pos) - len(a.defaults):]],
+                        a.defaults))
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if d is not None:
+            defaults[p.arg] = d
+    for name in f.static_params:
+        d = defaults.get(name)
+        if isinstance(d, (ast.List, ast.Dict, ast.Set)):
+            yield Finding(
+                "RL3", ctx.path, d.lineno, d.col_offset,
+                f"static argument '{name}' of '{f.qualpath}' defaults to an "
+                f"unhashable {type(d).__name__.lower()}; jit static args "
+                f"must be hashable (use a tuple)")
+
+
+@rule("RL3", "retrace-hazard",
+      "Python control flow / f-strings on traced values, set iteration in "
+      "traced bodies, unhashable static args")
+def check(ctx: ModuleCtx):
+    if not ctx.uses_jax:
+        return
+    for f in ctx.functions:
+        if not f.traced or f.env is None:
+            continue
+        yield from _unhashable_static_defaults(ctx, f)
+        env = f.env
+
+        def traced(e):
+            return ctx.expr_kind(e, env) == "traced"
+
+        for node in ast.walk(f.node):
+            if ctx.func_of(node) is not f:
+                continue
+            if isinstance(node, (ast.If, ast.While)):
+                if traced(node.test) and not _is_none_guard(node.test):
+                    kw = "while" if isinstance(node, ast.While) else "if"
+                    yield Finding(
+                        "RL3", ctx.path, node.lineno, node.col_offset,
+                        f"Python '{kw}' on a traced value in "
+                        f"'{f.qualpath}' retraces per value; use "
+                        f"lax.cond/jnp.where or mark the arg static")
+            elif isinstance(node, ast.For):
+                if traced(node.iter):
+                    yield Finding(
+                        "RL3", ctx.path, node.lineno, node.col_offset,
+                        f"Python 'for' over a traced value in "
+                        f"'{f.qualpath}' unrolls the loop per element; "
+                        f"use lax.scan/fori_loop")
+                elif isinstance(node.iter, ast.Set) or (
+                        isinstance(node.iter, ast.Call)
+                        and ctx.call_qual(node.iter) == "set"):
+                    yield Finding(
+                        "RL3", ctx.path, node.lineno, node.col_offset,
+                        f"iteration over an unordered set in traced "
+                        f"'{f.qualpath}' is nondeterministic across "
+                        f"processes; sort it first")
+            elif isinstance(node, ast.JoinedStr):
+                for part in node.values:
+                    if isinstance(part, ast.FormattedValue) \
+                            and traced(part.value):
+                        yield Finding(
+                            "RL3", ctx.path, node.lineno, node.col_offset,
+                            f"f-string formats a traced value in "
+                            f"'{f.qualpath}' at trace time; use "
+                            f"jax.debug.print")
+                        break

@@ -1,0 +1,191 @@
+"""RL1 — jax.random key reuse.
+
+A PRNG key is consumed the first time it is passed to any call (``normal``,
+``split``, ``fold_in``, a sampled layer, …).  Passing the *same* key to a
+second call without an intervening ``split``/``fold_in`` rebind silently
+correlates the two draws — the classic federated-sim bug where every client
+samples identical batches.
+
+The walk is flow-sensitive and statement-ordered per function scope.  Loop
+bodies are walked twice so a key bound *outside* the loop but consumed once
+per iteration is caught.  Branches of an ``if`` only mark a key consumed
+when both arms consume it (keeps false positives down).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .. import Finding, rule
+from ..analysis import ModuleCtx, target_names
+
+# Calls whose result is a fresh key (or batch of keys).
+KEY_SOURCES = {
+    "jax.random.key", "jax.random.PRNGKey", "jax.random.split",
+    "jax.random.fold_in", "jax.random.wrap_key_data", "jax.random.clone",
+}
+KEY_PARAM_HINTS = ("key", "rng")
+
+FRESH, CONSUMED = "fresh", "consumed"
+
+
+def _is_key_param(name: str) -> bool:
+    n = name.lower().lstrip("_")
+    return n in KEY_PARAM_HINTS or \
+        any(n.endswith("_" + h) or n.endswith(h) for h in KEY_PARAM_HINTS)
+
+
+def _key_source(ctx: ModuleCtx, node: ast.AST,
+                state: dict[str, str]) -> bool:
+    if isinstance(node, ast.Call):
+        q = ctx.call_qual(node) or ""
+        if q in KEY_SOURCES:
+            return True
+        # key.split(...) / key.fold_in(...) methods — only when the
+        # receiver or an argument is a tracked key (``"a/b".split`` isn't)
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("split", "fold_in"):
+            recv = node.func.value
+            if isinstance(recv, ast.Name) and recv.id in state:
+                return True
+            return any(isinstance(a, ast.Name) and a.id in state
+                       for a in node.args)
+        return False
+    if isinstance(node, ast.Subscript):       # keys[i] from a split batch
+        return isinstance(node.value, ast.Name) and node.value.id in state
+    return False
+
+
+class _Walker:
+    def __init__(self, ctx: ModuleCtx, func):
+        self.ctx = ctx
+        self.func = func
+        self.state: dict[str, str] = {}
+        self.findings: list[Finding] = []
+        self._seen: set[tuple[str, int]] = set()
+        a = func.node.args
+        for p in a.posonlyargs + a.args + a.kwonlyargs:
+            if _is_key_param(p.arg):
+                self.state[p.arg] = FRESH
+
+    def fire(self, name: str, node: ast.AST):
+        k = (name, node.lineno)
+        if k in self._seen:
+            return
+        self._seen.add(k)
+        self.findings.append(Finding(
+            "RL1", self.ctx.path, node.lineno, node.col_offset,
+            f"jax.random key '{name}' consumed again without "
+            f"split/fold_in (function '{self.func.qualpath}')"))
+
+    # -- expression side: every direct key argument is a consumption --------
+    def consume_in(self, expr: ast.AST):
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            # split/fold_in are the sanctioned re-derivations — passing a
+            # key to them is never the violating second use
+            q = self.ctx.call_qual(node) or ""
+            tail = node.func.attr if isinstance(node.func, ast.Attribute) \
+                else q.rpartition(".")[2]
+            if tail in ("split", "fold_in"):
+                continue
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Name) and arg.id in self.state:
+                    if self.state[arg.id] == CONSUMED:
+                        self.fire(arg.id, node)
+                    else:
+                        self.state[arg.id] = CONSUMED
+
+    # -- statement side -----------------------------------------------------
+    def stmt(self, node: ast.stmt):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return
+        if isinstance(node, (ast.For, ast.While)):
+            if isinstance(node, ast.For):
+                self.consume_in(node.iter)
+                for n in target_names(node.target):
+                    if _key_source(self.ctx, node.iter, self.state) \
+                            or _is_key_param(n):
+                        self.state[n] = FRESH
+            else:
+                self.consume_in(node.test)
+            for _ in range(2):                      # catch per-iteration reuse
+                for s in node.body:
+                    self.stmt(s)
+            for s in node.orelse:
+                self.stmt(s)
+            return
+        if isinstance(node, ast.If):
+            self.consume_in(node.test)
+            before = dict(self.state)
+            for s in node.body:
+                self.stmt(s)
+            after_body = dict(self.state)
+            self.state = dict(before)
+            for s in node.orelse:
+                self.stmt(s)
+            after_else = self.state
+            merged = dict(before)
+            for n in set(after_body) | set(after_else):
+                a, b = after_body.get(n), after_else.get(n)
+                if a == CONSUMED and b == CONSUMED:
+                    merged[n] = CONSUMED
+                elif FRESH in (a, b):
+                    merged[n] = FRESH
+            self.state = merged
+            return
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                self.consume_in(item.context_expr)
+            for s in node.body:
+                self.stmt(s)
+            return
+        if isinstance(node, ast.Try):
+            for block in (node.body, *[h.body for h in node.handlers],
+                          node.orelse, node.finalbody):
+                for s in block:
+                    self.stmt(s)
+            return
+        # plain statement: RHS consumptions first, then rebinds
+        targets: list[str] = []
+        value = None
+        if isinstance(node, ast.Assign):
+            targets = [n for t in node.targets for n in target_names(t)]
+            value = node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = target_names(node.target), node.value
+        elif isinstance(node, ast.AugAssign):
+            targets, value = target_names(node.target), node.value
+        elif isinstance(node, (ast.Expr, ast.Return)) \
+                and node.value is not None:
+            value = node.value
+        if value is not None:
+            self.consume_in(value)
+        if targets and value is not None:
+            if _key_source(self.ctx, value, self.state) or (
+                    isinstance(value, ast.Name) and value.id in self.state):
+                for n in targets:
+                    self.state[n] = FRESH
+            elif isinstance(value, (ast.Tuple, ast.List)):
+                for n, el in zip(targets, value.elts):
+                    if _key_source(self.ctx, el, self.state):
+                        self.state[n] = FRESH
+                    elif n in self.state:
+                        del self.state[n]
+            else:
+                for n in targets:
+                    self.state.pop(n, None)
+
+
+@rule("RL1", "rng-key-reuse",
+      "jax.random key passed to two calls without split/fold_in between")
+def check(ctx: ModuleCtx):
+    if not ctx.uses_jax:
+        return
+    for f in ctx.functions:
+        w = _Walker(ctx, f)
+        for s in f.node.body:
+            w.stmt(s)
+        yield from w.findings

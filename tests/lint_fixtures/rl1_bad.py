@@ -1,0 +1,16 @@
+"""RL1 fixture: key reuse.  Never imported — parsed by tests/test_lint.py;
+`# expect: <RULE>` comments mark the lines the linter must flag."""
+import jax
+
+
+def sample(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))  # expect: RL1
+    return a + b
+
+
+def per_round(key, n):
+    outs = []
+    for _ in range(n):
+        outs.append(jax.random.normal(key, (2,)))  # expect: RL1
+    return outs

@@ -1,0 +1,22 @@
+"""RL1 fixture: idiomatic key handling — must stay silent."""
+import jax
+
+
+def sample(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (4,))
+    b = jax.random.uniform(k2, (4,))
+    return a + b
+
+
+def per_round(key, n):
+    outs = []
+    for r in range(n):
+        kr = jax.random.fold_in(key, r)
+        outs.append(jax.random.normal(kr, (2,)))
+    return outs
+
+
+def batched(key, n):
+    keys = jax.random.split(key, n)
+    return [jax.random.normal(keys[i], (2,)) for i in range(n)]

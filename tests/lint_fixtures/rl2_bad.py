@@ -1,0 +1,42 @@
+"""RL2 fixture: host syncs in traced functions and per-iteration in loops."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    m = np.mean(x)  # expect: RL2
+    v = float(x.sum())  # expect: RL2
+    print(x)  # expect: RL2
+    return m + v
+
+
+def make_step():
+    @jax.jit
+    def s(x):
+        return x * 2
+    return s
+
+
+def round_loop(batches):
+    step_fn = make_step()
+    total = 0.0
+    for b in batches:
+        out = step_fn(b)
+        total += float(out)  # expect: RL2
+    return total
+
+
+def eval_loop(batches, step_fn):
+    vals = []
+    for b in batches:
+        vals.append(step_fn(b).item())  # expect: RL2
+    return vals
+
+
+def transfer_loop(params, idx):
+    outs = []
+    for i in idx:
+        outs.append(jax.device_get(params))  # expect: RL2
+    return outs

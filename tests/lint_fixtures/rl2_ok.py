@@ -1,0 +1,32 @@
+"""RL2 fixture: device-side accumulation with one post-loop transfer —
+must stay silent."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def step(x):
+    return jnp.mean(x) + x.sum()
+
+
+def make_step():
+    @jax.jit
+    def s(x):
+        return x * 2
+    return s
+
+
+def round_loop(batches):
+    step_fn = make_step()
+    vals = []
+    for b in batches:
+        vals.append(step_fn(b))
+    return [float(v) for v in jax.device_get(vals)]
+
+
+def fresh_transfer(clients):
+    outs = []
+    for c in clients:
+        local = jnp.asarray(c) * 2
+        outs.append(jax.device_get(local))   # fresh per-iteration data
+    return outs

@@ -1,0 +1,26 @@
+"""RL3 fixture: retrace hazards in traced functions."""
+import functools
+
+import jax
+
+
+@jax.jit
+def f(x):
+    if x > 0:  # expect: RL3
+        x = -x
+    msg = f"value={x}"  # expect: RL3
+    for t in x:  # expect: RL3
+        msg += str(t)
+    return x
+
+
+@jax.jit
+def g(x, modes):
+    for m in {"a", "b"}:  # expect: RL3
+        x = x + len(m)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def h(x, cfg=[1, 2]):  # expect: RL3
+    return x * cfg[0]

@@ -1,0 +1,18 @@
+"""RL3 fixture: static/None/shape-derived branching — must stay silent."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def f(x, n, gate=None):
+    if n > 2:                    # static arg
+        x = x * 2
+    if gate is not None:         # None guard is a trace-time constant
+        x = x * gate
+    if x.shape[0] > 1:           # shape-derived → static
+        x = x + 1
+    if "w3" in {"w1": 1}:        # pytree structure membership
+        x = x - 1
+    return jnp.where(x > 0, x, -x)

@@ -1,0 +1,28 @@
+"""RL4 fixture: privacy wire-path violations."""
+from repro.core import dp as DP
+from repro.fedsim.pipeline import ClientUpdate
+from repro.fedsim.transport import TopK
+from repro.secagg import protocol as SA
+
+
+def rogue_aggregate(specs, updates):
+    return SA.aggregate_round(specs, updates)  # expect: RL4
+
+
+def encode_then_clip(codec, x):
+    payload, n = codec.encode(x, key=0)  # expect: RL4
+    y = DP.clip_to_norm(x, 1.0)
+    return payload, y
+
+
+def private_path():
+    codec = TopK(64)  # expect: RL4
+    return codec
+
+
+def send(codec, x):
+    return codec.encode(x)  # expect: RL4
+
+
+def rogue_update(cid, delta):
+    return ClientUpdate(cid, delta, weight=1.0)  # expect: RL4

@@ -1,0 +1,19 @@
+"""RL4 fixture: the sanctioned wire path — must stay silent."""
+from repro.core import dp as DP
+from repro.fedsim.pipeline import ClientUpdate
+from repro.fedsim.transport import SignSGD
+
+
+def clip_then_encode(codec, x, cid):
+    x = DP.clip_to_norm(x, 1.0)
+    payload, n = codec.encode(x, key=cid)
+    return payload, n
+
+
+def good_update(pipe, cid, delta, masks_np):
+    upd = ClientUpdate(cid, delta, weight=1.0)
+    return pipe.encode(upd, masks_np)
+
+
+def private_field_exact():
+    return SignSGD()              # field-exact codec is fine under secagg

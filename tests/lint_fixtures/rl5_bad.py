@@ -1,0 +1,21 @@
+"""RL5 fixture: pallas kernel structure violations."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref, acc_ref):
+    acc_ref[...] += x_ref[...]  # expect: RL5
+    o_ref[...] = acc_ref[...]  # expect: RL5
+
+
+def reduce_rows(x):
+    m, k = x.shape
+    grid = (m // 8, k / 8)  # expect: RL5
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],  # expect: RL5
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, 0, 0)),  # expect: RL5
+        out_shape=jax.ShapeDtypeStruct((m, 8), jnp.float32),
+    )(x)

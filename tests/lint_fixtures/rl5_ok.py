@@ -1,0 +1,39 @@
+"""RL5 fixture: the idiomatic guarded-init / tail-epilogue kernel —
+must stay silent."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref, acc_ref, *, k_steps):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += x_ref[...]
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        o_ref[...] = acc_ref[...]
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def reduce_rows(x, group=1):
+    m, k = x.shape
+    k_steps = k // 8
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps),
+        grid=(m // 8, k_steps),
+        in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((8, 8), lambda i, j, g=group: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 8), jnp.float32),
+        scratch_shapes=[_vmem((8, 8))],
+    )(x)

@@ -1,0 +1,22 @@
+"""Suppression fixture: violations silenced by `# lint: disable` markers.
+tests/test_lint.py also re-lints this file with the markers stripped to
+prove the findings come back."""
+import jax
+
+
+def targeted(key):
+    a = jax.random.normal(key, (2,))
+    b = jax.random.normal(key, (2,))  # lint: disable=RL1
+    return a + b
+
+
+def bare(key):
+    a = jax.random.normal(key, (2,))
+    b = jax.random.normal(key, (2,))  # lint: disable
+    return a + b
+
+
+def wrong_id(key):
+    a = jax.random.normal(key, (2,))
+    b = jax.random.normal(key, (2,))  # lint: disable=RL5 # expect: RL1
+    return a + b

@@ -1,0 +1,111 @@
+"""Tests for the repro.lint static-analysis pass.
+
+Fixture contract: every file in tests/lint_fixtures/ is parsed (never
+imported); a trailing ``# expect: RLx[,RLy]`` comment marks a line the
+linter must flag with exactly those rule IDs, and every unmarked line must
+stay silent.  The *_ok.py fixtures therefore assert zero findings on the
+idiomatic pattern for each rule family.
+"""
+
+import json
+import pathlib
+import re
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.lint import Finding, all_rules, lint_paths, lint_source  # noqa: E402
+from repro.lint import baseline as bl  # noqa: E402
+from repro.lint.__main__ import main as lint_main  # noqa: E402
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+FIX = pathlib.Path(__file__).parent / "lint_fixtures"
+FIXTURES = sorted(p.name for p in FIX.glob("*.py"))
+
+EXPECT = re.compile(r"#\s*expect:\s*(RL\d+(?:\s*,\s*RL\d+)*)")
+
+
+def run_fixture(name, source=None):
+    src = source if source is not None else (FIX / name).read_text()
+    # report under a neutral path: the rules' tests/-exemptions must not
+    # apply to the fixtures themselves
+    findings = lint_source(f"fixtures/{name}", src)
+    expected = {}
+    for i, line in enumerate(src.splitlines(), 1):
+        m = EXPECT.search(line)
+        if m:
+            expected[i] = sorted({s.strip() for s in m.group(1).split(",")
+                                  if s.strip()})
+    got = {}
+    for f in findings:
+        got.setdefault(f.line, set()).add(f.rule)
+    return {k: sorted(v) for k, v in got.items()}, expected, findings
+
+
+@pytest.mark.parametrize("name", FIXTURES)
+def test_fixture_exact_lines(name):
+    got, expected, _ = run_fixture(name)
+    assert got == expected, (
+        f"{name}: expected findings {expected}, got {got}")
+
+
+def test_every_rule_family_has_firing_and_silent_fixture():
+    ids = {r.id for r in all_rules()}
+    assert {"RL1", "RL2", "RL3", "RL4", "RL5"} <= ids
+    for rid in ("rl1", "rl2", "rl3", "rl4", "rl5"):
+        assert f"{rid}_bad.py" in FIXTURES
+        assert f"{rid}_ok.py" in FIXTURES
+        _, expected, _ = run_fixture(f"{rid}_bad.py")
+        assert expected, f"{rid}_bad.py marks no expected findings"
+        got_ok, _, _ = run_fixture(f"{rid}_ok.py")
+        assert got_ok == {}, f"{rid}_ok.py should be silent: {got_ok}"
+
+
+def test_suppressions_stripped_fire_again():
+    src = (FIX / "suppress.py").read_text()
+    stripped = (src.replace("# lint: disable=RL5", "")
+                .replace("# lint: disable=RL1", "")
+                .replace("# lint: disable", ""))
+    _, _, findings = run_fixture("suppress.py", stripped)
+    assert [f.rule for f in findings] == ["RL1", "RL1", "RL1"]
+
+
+def test_baseline_filters_known_findings(tmp_path):
+    src = (FIX / "rl1_bad.py").read_text()
+    findings = lint_source("fixtures/rl1_bad.py", src)
+    assert findings
+    base = tmp_path / "base.json"
+    bl.save(str(base), findings)
+    assert bl.filter_new(findings, bl.load(str(base))) == []
+    # a *new* occurrence of a baselined key still fails (count semantics)
+    extra = findings + [Finding(findings[0].rule, findings[0].path,
+                                999, 0, findings[0].msg)]
+    new = bl.filter_new(sorted(extra, key=lambda f: f.line),
+                        bl.load(str(base)))
+    assert len(new) == 1 and new[0].line == 999
+
+
+def test_src_tree_clean_against_committed_baseline():
+    findings = lint_paths([str(REPO / "src")], root=str(REPO))
+    base = bl.load(str(REPO / "lint_baseline.json"))
+    new = bl.filter_new(findings, base)
+    assert new == [], "new lint findings in src/:\n" + \
+        "\n".join(f.render() for f in new)
+
+
+def test_list_rules_cli(capsys):
+    assert lint_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in ("RL1", "RL2", "RL3", "RL4", "RL5"):
+        assert rid in out
+
+
+def test_cli_json_format_and_exit_code(capsys):
+    rc = lint_main([str(FIX / "rl1_bad.py"), "--format", "json"])
+    assert rc == 1
+    data = json.loads(capsys.readouterr().out)
+    assert data and all(d["rule"] == "RL1" for d in data)
+    rc = lint_main([str(FIX / "rl2_ok.py")])
+    assert rc == 0
