@@ -150,6 +150,8 @@ def main(quick: bool = False) -> None:
     rows.append(C.row("fedsim/async_sim_time_s", f"{a['sim_time_s']:.1f}",
                       events=a["events"],
                       mean_staleness=f"{a['mean_staleness']:.2f}"))
+    from repro.obs import provenance
+    out["provenance"] = provenance({"bench_quick": bool(quick or C.QUICK)})
     with open(JSON_PATH, "w") as f:
         json.dump(out, f, indent=1)
     rows.append(C.row("fedsim/json", JSON_PATH, ndev=out["ndev"]))

@@ -130,6 +130,22 @@ def row(name: str, value, **derived) -> str:
     return f"{name},{value},{dv}"
 
 
+_provenance_emitted = False
+
+
+def provenance_row() -> str:
+    """BENCH_provenance: commit / jax version / device kind / BENCH_QUICK —
+    so archived benchmark numbers stay attributable to an environment."""
+    from repro.obs import provenance
+    p = provenance({"bench_quick": QUICK, "bench_rounds": ROUNDS})
+    return row("BENCH_provenance", p.get("commit", "unknown"),
+               **{k: v for k, v in sorted(p.items()) if k != "commit"})
+
+
 def emit(rows):
+    global _provenance_emitted
+    if not _provenance_emitted:
+        _provenance_emitted = True
+        print(provenance_row(), flush=True)
     for r in rows:
         print(r, flush=True)

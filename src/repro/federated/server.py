@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as OBS
 from repro import optim as OPT
 from repro.core import comm as COMM
 from repro.core import masks as MK
@@ -229,7 +230,7 @@ def _private_round(strategy, bc, encoded, sel, masks, masks_np, fc, rnd,
         strategy, agg.trainable, agg.vote_sums, agg.n_reporting, masks,
         masks_np, rnd)
     if agg.secagg is not None:
-        history["secagg_rounds"].append({
+        history.record_secagg({
             "rnd": rnd,
             "phases": {k: dataclasses.asdict(v)
                        for k, v in agg.secagg.phases.items()},
@@ -241,7 +242,7 @@ def _private_round(strategy, bc, encoded, sel, masks, masks_np, fc, rnd,
         # an aborted round never decodes (or noises) an aggregate, so no
         # privacy is spent — ε only grows on actual releases
         accountant.step()
-        history["dp_eps"].append((rnd, accountant.epsilon(fc.dp_delta)))
+        history.record_eps(rnd, accountant.epsilon(fc.dp_delta))
     return trainable, masks, masks_np, agg
 
 
@@ -275,11 +276,13 @@ def _run_stage1(model, strategy, base, trainable, parts, train, fc, opt, rng,
     pipe = PL.UploadPipeline(
         fc, strategy=None,
         flatten=lambda d, m: PL.flatten_gate(d, s1_gate),
-        unflatten=lambda w, like, m: PL.unflatten_gate(w, like, s1_gate))
+        unflatten=lambda w, like, m: PL.unflatten_gate(w, like, s1_gate),
+        stage="stage1")
     private = SA.wants_private(fc)
     s1_stats = history.setdefault(
         "stage1", {"rounds": 0, "up_bytes": 0, "n_clipped": 0})
     for rnd in range(s1_rounds):
+        rsp = history.begin_round(rnd, phase="stage1")
         sel = rng.choice(len(parts), size=min(fc.clients_per_round,
                                               len(parts)), replace=False)
         down_per = strategy.stage1_comm_bytes(base)
@@ -322,13 +325,13 @@ def _run_stage1(model, strategy, base, trainable, parts, train, fc, opt, rng,
             cid, down_per, enc_of[int(cid)].nbytes,
             DV.compute_s(int(cid), fc.device_profile,
                          enc_of[int(cid)].n_steps)) for cid in sel]
-        history["sim_time_s"] += (max(costs) if costs else 0.0) + protocol_s
-        logs.append(RoundLog(rnd, int(down), int(up),
-                             live_ranks=0, dead_modules=0,
-                             trainable_params=PR.count_trainable(base),
-                             loss=float("nan"),
-                             sim_time_s=history["sim_time_s"]))
-        history["comm_gb"] += (down + up) / 1e9
+        history.add_sim((max(costs) if costs else 0.0) + protocol_s)
+        log = RoundLog(rnd, int(down), int(up),
+                       live_ranks=0, dead_modules=0,
+                       trainable_params=PR.count_trainable(base),
+                       loss=float("nan"),
+                       sim_time_s=history["sim_time_s"])
+        history.end_round(rsp, log, down, up)
     # convert the sparse delta into the LoRA init, reset the base
     trainable = strategy.svd_init_from_delta(model, base0, base, trainable)
     return base0, trainable
@@ -350,9 +353,9 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
     private = SA.wants_private(fc)
     accountant = make_accountant(fc, len(parts))
 
-    logs: list[RoundLog] = []
-    history = {"rounds": logs, "acc": [], "comm_gb": 0.0, "sim_time_s": 0.0,
-               "secagg_rounds": [], "dp_eps": []}
+    history = OBS.RunRecorder("seq", fc,
+                              extra_keys=("secagg_rounds", "dp_eps"))
+    logs: list[RoundLog] = history["rounds"]
     t0 = time.perf_counter()
 
     # SLoRA stage 1: sparse full-FT rounds before LoRA (baselines.SLoRA)
@@ -364,6 +367,7 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
                                       history, accountant)
 
     for rnd in range(s1_rounds, fc.rounds):
+        rsp = history.begin_round(rnd)
         sel = rng.choice(len(parts), size=min(fc.clients_per_round,
                                               len(parts)), replace=False)
         # ---- CommPru'd broadcast (delta-coded when a codec is on) --------
@@ -377,6 +381,7 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
 
         results, local_masks, encoded = [], [], []
         for cid in sel:
+            csp = history.begin_client(int(cid))
             idx = parts[cid]
             client_data = Dataset(train.tokens[idx], train.labels[idx])
             gen = batches(client_data, fc.batch_size,
@@ -396,8 +401,11 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
             upd = PL.ClientUpdate(int(cid), PL.delta_tree(params_k, bc),
                                   weight=float(len(idx)), votes=lm,
                                   n_steps=m["n_batches"])
-            encoded.append(pipe.encode(upd, masks_np))
+            enc = pipe.encode(upd, masks_np)
+            encoded.append(enc)
             results.append((int(cid), m))
+            csp.end(n_steps=m["n_batches"], up_bytes=enc.nbytes,
+                    loss=m["loss"])
 
         if private:
             # ---- secagg / DP: the server only sees the field aggregate ---
@@ -424,7 +432,7 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
             int(cid), down_per, enc_of[int(cid)].nbytes,
             DV.compute_s(int(cid), fc.device_profile,
                          enc_of[int(cid)].n_steps)) for cid in sel]
-        history["sim_time_s"] += (max(costs) if costs else 0.0) + protocol_s
+        history.add_sim((max(costs) if costs else 0.0) + protocol_s)
 
         live = int(MK.count_true(masks_np)) if masks_np else n_rank_units
         n_dead = (len(PR.dead_modules(masks_np)) if masks_np else 0)
@@ -436,12 +444,11 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
         if (rnd + 1) % fc.eval_every == 0 or rnd == fc.rounds - 1:
             log.acc = evaluate(model, base, trainable, masks, test, fc)
             history["acc"].append((rnd, log.acc))
-        logs.append(log)
-        history["comm_gb"] += (down + up) / 1e9
+        history.end_round(rsp, log, down, up)
         if on_round:
             on_round(rnd, log)
 
-    history["final_acc"] = logs[-1].acc
+    history["final_acc"] = logs[-1].acc if logs else float("nan")
     if accountant is not None:
         history["dp"] = {"epsilon": accountant.epsilon(fc.dp_delta),
                          "delta": fc.dp_delta,
@@ -452,6 +459,7 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
     history["base"] = base
     history["trainable"] = trainable
     history["masks"] = masks_np
+    history.finish()
     return history
 
 

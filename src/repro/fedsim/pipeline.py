@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as OBS
 from repro.federated import devices as DV
 from repro.fedsim import transport as T
 from repro.secagg import dp as DP
@@ -193,9 +194,10 @@ class UploadPipeline:
 
     def __init__(self, fc, strategy=None, flatten=None, unflatten=None,
                  link_of: Callable[[int], T.Link] | None = None,
-                 field_spec=None):
+                 field_spec=None, stage: str = "stage2"):
         self.fc = fc
         self.strategy = strategy
+        self.stage = stage                  # metric label: stage1 | stage2
         self.codec = make_fc_codec(fc)
         self.flatten = flatten or T.flatten_update
         self.unflatten = unflatten or T.unflatten_update
@@ -222,6 +224,8 @@ class UploadPipeline:
         reconstruction fidelity is optimistic; per-client catch-up
         accounting is a ROADMAP follow-on.  The async runner already keys a
         channel per client (its clients genuinely hold stale streams)."""
+        psp = OBS.get_tracer().begin("broadcast", kind="pipeline",
+                                     endpoint=str(endpoint))
         ch = self._down.get(endpoint)
         if ch is None:
             ch = self._down[endpoint] = DeltaChannel(
@@ -229,11 +233,19 @@ class UploadPipeline:
         bc, nbytes = ch.send(trainable, masks_np)
         if self.codec is None:
             if self.strategy is not None:
-                return bc, self.strategy.comm_down(trainable, masks_np)
-            wire = self.flatten(trainable, masks_np)
-            return bc, wire.size * 4 + T.HEADER_BYTES \
-                + T.mask_wire_bytes(masks_np)
-        return bc, nbytes + T.mask_wire_bytes(masks_np)
+                total = self.strategy.comm_down(trainable, masks_np)
+            else:
+                wire = self.flatten(trainable, masks_np)
+                total = wire.size * 4 + T.HEADER_BYTES \
+                    + T.mask_wire_bytes(masks_np)
+        else:
+            total = nbytes + T.mask_wire_bytes(masks_np)
+        m = OBS.get_metrics()
+        if m.enabled:
+            m.counter("pipeline.down_bytes", codec=self.fc.codec,
+                      stage=self.stage).inc(int(total))
+        psp.end(nbytes=int(total))
+        return bc, total
 
     # ---- uplink ------------------------------------------------------------
 
@@ -269,6 +281,18 @@ class UploadPipeline:
                     + T.mask_wire_bytes(masks_np)
         if getattr(fc, "secagg", "off") != "off":
             nbytes = 0        # the protocol's masked phase prices the upload
+        m = OBS.get_metrics()
+        if m.enabled:
+            m.counter("pipeline.up_bytes", codec=fc.codec,
+                      stage=self.stage).inc(int(nbytes))
+            m.counter("pipeline.updates", codec=fc.codec,
+                      stage=self.stage).inc()
+            if clipped:
+                m.counter("dp.clip_events", stage=self.stage).inc()
+            if self.codec is not None:
+                m.histogram("pipeline.ef_residual_norm",
+                            codec=fc.codec).observe(
+                    float(np.linalg.norm(self._resid[upd.cid])))
         d_tree = self.unflatten(dec, upd.delta, masks_np)
         return EncodedUpdate(
             cid=upd.cid, wire=dec, delta=d_tree, nbytes=nbytes,
@@ -293,6 +317,8 @@ class UploadPipeline:
         Σŵ·(bc+Δᵢ) = bc + Σŵ·Δᵢ."""
         if not encoded:
             return global_tree
+        psp = OBS.get_tracer().begin("aggregate", kind="pipeline",
+                                     n_updates=len(encoded))
         w = np.asarray([e.weight for e in encoded], np.float64)
         w = (w / w.sum()).astype(np.float32)
 
@@ -303,14 +329,21 @@ class UploadPipeline:
             return acc
 
         davg = jax.tree.map(avg, *[e.delta for e in encoded])
-        return apply_delta(global_tree, davg)
+        out = apply_delta(global_tree, davg)
+        psp.end()
+        return out
 
     def aggregate_private(self, bc: Any, encoded: list[EncodedUpdate],
                           participants, masks_np: Any | None, rnd: int):
         """secagg/DP aggregation of the same encoded wires (field sums,
         dropout recovery, vote sums, noise) — secagg.protocol owns it."""
         from repro.secagg import protocol as SA
-        return SA.aggregate_round(bc, encoded, [int(c) for c in participants],
-                                  masks_np, self.fc, rnd,
-                                  link_of=self.link_of,
-                                  unflatten=self.unflatten)
+        psp = OBS.get_tracer().begin("aggregate_private", kind="pipeline",
+                                     n_updates=len(encoded))
+        out = SA.aggregate_round(bc, encoded, [int(c) for c in participants],
+                                 masks_np, self.fc, rnd,
+                                 link_of=self.link_of,
+                                 unflatten=self.unflatten)
+        psp.end(up_bytes=int(out.up_bytes), down_bytes=int(out.down_bytes),
+                aborted=out.aborted)
+        return out

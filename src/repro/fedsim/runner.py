@@ -29,6 +29,7 @@ from typing import Callable
 import jax
 import numpy as np
 
+from repro import obs as OBS
 from repro.core import masks as MK
 from repro.core import pruning as PR
 from repro.core import comm as COMM
@@ -87,9 +88,9 @@ def run_cohort(model, strategy, parts, train, test, fc,
     private = SA.wants_private(fc)
     accountant = SV.make_accountant(fc, len(parts))
 
-    logs: list[SV.RoundLog] = []
-    history = {"rounds": logs, "acc": [], "comm_gb": 0.0, "sim_time_s": 0.0,
-               "secagg_rounds": [], "dp_eps": []}
+    history = OBS.RunRecorder("cohort", fc,
+                              extra_keys=("secagg_rounds", "dp_eps"))
+    logs: list[SV.RoundLog] = history["rounds"]
     t0 = time.perf_counter()
 
     s1_rounds = (strategy.stage1_rounds(fc.rounds)
@@ -100,6 +101,7 @@ def run_cohort(model, strategy, parts, train, test, fc,
                                          history, accountant)
 
     for rnd in range(s1_rounds, fc.rounds):
+        rsp = history.begin_round(rnd)
         sel = rng.choice(len(parts), size=cpr, replace=False)
         # ---- CommPru'd broadcast (delta-coded when a codec is on) --------
         if masks_np is not None:
@@ -122,9 +124,10 @@ def run_cohort(model, strategy, parts, train, test, fc,
         cohort_idx = {}
         if cohort is not None:
             stacked = CH.stack_params(bc, len(cohort.weights))
-            pc, gc, lc, mc, avg = cohort_fn(
-                base, stacked, masks, gate, cohort.batches,
-                cohort.step_mask, cohort.weights)
+            with OBS.annotate("cohort_dispatch"):
+                pc, gc, lc, mc, avg = cohort_fn(
+                    base, stacked, masks, gate, cohort.batches,
+                    cohort.step_mask, cohort.weights)
             lc, mc = np.asarray(lc, np.float32), np.asarray(mc, np.float32)
             cohort_idx = {cid: i for i, cid in enumerate(cohort.cids)}
             # One batched device→host pull for the whole cohort; the
@@ -144,6 +147,7 @@ def run_cohort(model, strategy, parts, train, test, fc,
         results, local_masks, encoded = [], [], []
         up = 0
         for cid in active:
+            csp = history.begin_client(cid)
             if cid in cohort_idx:
                 i = cohort_idx[cid]
                 sm = cohort.step_mask[i]
@@ -182,6 +186,8 @@ def run_cohort(model, strategy, parts, train, test, fc,
             up += enc.nbytes
             encoded.append(enc)
             results.append((w, m))
+            csp.end(n_steps=m["n_batches"], up_bytes=enc.nbytes,
+                    loss=m["loss"])
 
         # ---- aggregation: on-device psum unless a side path was taken ----
         protocol_s = 0.0
@@ -218,7 +224,7 @@ def run_cohort(model, strategy, parts, train, test, fc,
                 cid, down_per, enc_of[cid].nbytes,
                 _compute_s(cid, fc, enc_of[cid].n_steps, slows[k])))
         round_s = (max(costs) if costs else 0.0) + protocol_s
-        history["sim_time_s"] += round_s
+        history.add_sim(round_s)
 
         live = int(MK.count_true(masks_np)) if masks_np else n_rank_units
         n_dead = len(PR.dead_modules(masks_np)) if masks_np else 0
@@ -231,12 +237,11 @@ def run_cohort(model, strategy, parts, train, test, fc,
         if (rnd + 1) % fc.eval_every == 0 or rnd == fc.rounds - 1:
             log.acc = SV.evaluate(model, base, trainable, masks, test, fc)
             history["acc"].append((rnd, log.acc))
-        logs.append(log)
-        history["comm_gb"] += (down + up) / 1e9
+        history.end_round(rsp, log, down, up)
         if on_round:
             on_round(rnd, log)
 
-    history["final_acc"] = logs[-1].acc
+    history["final_acc"] = logs[-1].acc if logs else float("nan")
     if accountant is not None:
         history["dp"] = {"epsilon": accountant.epsilon(fc.dp_delta),
                          "delta": fc.dp_delta,
@@ -247,6 +252,7 @@ def run_cohort(model, strategy, parts, train, test, fc,
     history["base"] = base
     history["trainable"] = trainable
     history["masks"] = masks_np
+    history.finish()
     return history
 
 
@@ -262,9 +268,8 @@ def run_async(model, strategy, parts, train, test, fc,
     pipe = PL.UploadPipeline(fc, strategy)
     ev_rng = _event_rng(fc)
 
-    logs: list[SV.RoundLog] = []
-    history = {"rounds": logs, "acc": [], "comm_gb": 0.0, "sim_time_s": 0.0,
-               "events": []}
+    history = OBS.RunRecorder("async", fc, extra_keys=("events",))
+    logs: list[SV.RoundLog] = history["rounds"]
     t0 = time.perf_counter()
 
     s1_rounds = (strategy.stage1_rounds(fc.rounds)
@@ -301,8 +306,8 @@ def run_async(model, strategy, parts, train, test, fc,
         if not dropped:
             stash[seq_no] = (bc, masks, masks_np, gate, version)
         heapq.heappush(heap, (finish, seq_no, cid, dropped))
-        history["events"].append((round(now, 9), "dispatch", cid, version,
-                                  dropped))
+        history.async_event(now, "dispatch", cid=cid, version=version,
+                            dropped=dropped)
         seq_no += 1
 
     for _ in range(concurrency):
@@ -334,13 +339,14 @@ def run_async(model, strategy, parts, train, test, fc,
         enc = pipe.encode(upd, d_masks_np)
         pend_up += enc.nbytes
         buffer.append((enc, params_k, grads_k, m))
-        history["events"].append((round(now, 9), "update", cid, d_version))
+        history.async_event(now, "update", cid=cid, version=d_version)
         dispatch(now)
 
         if len(buffer) >= buffer_k:
             # ---- staleness-weighted buffered aggregation -----------------
             # (deltas were encoded against per-dispatch masks; averaging in
             # tree space keeps stale and fresh contributions aligned)
+            rsp = history.begin_round(agg)
             trainable = pipe.aggregate(trainable,
                                        [b[0] for b in buffer])
             local_masks = []
@@ -354,7 +360,7 @@ def run_async(model, strategy, parts, train, test, fc,
             live = (int(MK.count_true(masks_np)) if masks_np
                     else n_rank_units)
             n_dead = len(PR.dead_modules(masks_np)) if masks_np else 0
-            history["sim_time_s"] = now
+            history.set_sim(now)
             log = SV.RoundLog(
                 agg, int(pend_down), int(pend_up), live,
                 dead_modules=n_dead,
@@ -362,13 +368,13 @@ def run_async(model, strategy, parts, train, test, fc,
                 loss=float(np.mean([b[3]["loss"] for b in buffer])),
                 sim_time_s=now,
                 staleness=float(np.mean([b[0].staleness for b in buffer])))
-            history["comm_gb"] += (pend_down + pend_up) / 1e9
+            b_down, b_up = pend_down, pend_up
             pend_down = pend_up = 0
             if (agg + 1) % fc.eval_every == 0 or agg == fc.rounds - 1:
                 log.acc = SV.evaluate(model, base, trainable, masks, test,
                                       fc)
                 history["acc"].append((agg, log.acc))
-            logs.append(log)
+            history.end_round(rsp, log, b_down, b_up)
             if on_round:
                 on_round(agg, log)
             buffer.clear()
@@ -376,11 +382,12 @@ def run_async(model, strategy, parts, train, test, fc,
             agg += 1
 
     # in-flight broadcasts were transmitted even if never aggregated
-    history["comm_gb"] += (pend_down + pend_up) / 1e9
+    history.inflight_comm(pend_down, pend_up)
     history["final_acc"] = logs[-1].acc if logs else float("nan")
     jax.block_until_ready(trainable)
     history["wall_s"] = time.perf_counter() - t0
     history["base"] = base
     history["trainable"] = trainable
     history["masks"] = masks_np
+    history.finish()
     return history

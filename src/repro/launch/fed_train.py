@@ -20,6 +20,7 @@ import argparse
 
 import numpy as np
 
+from repro import obs
 from repro.configs.distilbert import MINI
 from repro.data.synthetic import make_classification
 from repro.federated.baselines import all_strategies
@@ -70,7 +71,16 @@ def main(argv=None):
                     help="client-level DP: per-client delta L2 clip")
     ap.add_argument("--dp-noise-multiplier", type=float, default=0.0,
                     help="client-level DP: z (server noise = z·clip on sum)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a repro.obs JSONL trace (spans + metrics) "
+                         "here; inspect with `python -m repro.obs summarize`")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        obs.configure(args.trace, meta=obs.provenance(
+            {"cmd": "fed_train", "strategy": args.strategy,
+             "runner": args.runner, "codec": args.codec,
+             "secagg": args.secagg}))
 
     cfg = MINI.with_(n_classes=args.n_classes, adapter_rank=args.rank)
     train = make_classification(1500, args.n_classes, cfg.vocab_size, 32,
@@ -131,6 +141,10 @@ def main(argv=None):
         s1 = h["stage1"]
         print(f"stage1: {s1['rounds']} rounds  up {s1['up_bytes'] / 1e6:.2f}"
               f" MB  clipped {s1['n_clipped']}")
+    if args.trace:
+        obs.close()
+        print(f"trace written to {args.trace}  "
+              f"(python -m repro.obs summarize {args.trace})")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import ARCH_IDS, PAPER_IDS, get_config
 from repro.models import Model
 from repro.pytree import materialize
@@ -143,6 +144,9 @@ def main(argv=None):
                     help="distinct adapters (round-robin across requests)")
     ap.add_argument("--slots", type=int, default=0,
                     help="engine cache slots (0 → min(batch, 8))")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a repro.obs JSONL trace (engine steps, "
+                         "scheduler metrics, token counters) here")
     args = ap.parse_args(argv)
     if args.batch < 1:
         ap.error("--batch must be >= 1")
@@ -157,6 +161,11 @@ def main(argv=None):
     if cfg.is_encoder_decoder or cfg.modality == "vision":
         legacy_static_batch(cfg, args)
         return
+
+    if args.trace:
+        obs.configure(args.trace, meta=obs.provenance(
+            {"cmd": "serve", "arch": args.arch, "tenants": args.tenants,
+             "slots": args.slots, "gen": args.gen}))
 
     n_slots = args.slots or min(args.batch, 8)
     max_seq = args.prompt_len + args.gen
@@ -179,6 +188,10 @@ def main(argv=None):
           f"{engine.steps} engine steps, "
           f"{engine.decode_calls} decode calls")
     print("generated token ids (first request):", reqs[0].out)
+    if args.trace:
+        obs.get_metrics().gauge("serve.tokens_per_s").set(n_tok / wall)
+        obs.close()
+        print(f"trace written to {args.trace}")
 
 
 if __name__ == "__main__":

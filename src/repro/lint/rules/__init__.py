@@ -1,3 +1,3 @@
 """Rule modules self-register via repro.lint.rule on import."""
 
-from . import rng, hostsync, retrace, privacy, pallas  # noqa: F401
+from . import rng, hostsync, retrace, privacy, pallas, printing  # noqa: F401

@@ -1,0 +1,46 @@
+"""RL6 — bare ``print()`` in library code.
+
+Library modules (everything under ``src/repro/`` except the ``launch/``
+CLIs, the lint pass itself, and ``__main__.py`` entry points) must not
+write to stdout: it corrupts machine-readable driver output (the
+``FEDSIM_JSON=``/``BENCH_*`` row protocols parse stdout), bypasses the
+``repro.obs`` trace (the supported channel for progress and metrics), and
+— in traced functions — is already an RL2 hazard.  Route telemetry through
+``repro.obs`` (spans/events/metrics) or raise; user-facing text belongs in
+the launchers.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .. import Finding, rule
+from ..analysis import ModuleCtx
+
+# CLI / tooling surfaces where stdout IS the product
+_EXEMPT_PARTS = ("launch/", "lint/", "tests/", "benchmarks/", "examples/")
+
+
+def _exempt(path: str) -> bool:
+    if path.endswith("__main__.py"):
+        return True
+    return any(f"/{part}" in f"/{path}" for part in _EXEMPT_PARTS)
+
+
+@rule("RL6", "print-in-library",
+      "bare print() in library code; route output through repro.obs "
+      "(or a launcher) instead of stdout")
+def check(ctx: ModuleCtx):
+    if _exempt(ctx.path):
+        return
+    for call in ctx.calls():
+        if isinstance(call.func, ast.Name) and call.func.id == "print" \
+                and ctx.call_qual(call) == "print":
+            f = ctx.func_of(call)
+            if f is not None and any(
+                    "print" in names for names, _, _ in ctx.assignments(f)):
+                continue                    # locally rebound, not the builtin
+            yield Finding(
+                "RL6", ctx.path, call.lineno, call.col_offset,
+                "bare print() in library code; emit a repro.obs "
+                "event/metric or move the message to a launch/ CLI")

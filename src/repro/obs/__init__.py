@@ -1,0 +1,42 @@
+"""repro.obs — unified observability: span tracing + labeled metrics.
+
+Stdlib-only (jax is touched lazily and only when tracing is enabled).  One
+process-wide tracer, disabled by default; runners, the upload pipeline,
+secagg, and the serving engine are instrumented against the no-op tracer's
+zero-cost surface.
+
+    from repro import obs
+    obs.configure(path="trace.jsonl", meta=obs.provenance())
+    ...  # run training / serving
+    obs.close()                      # writes the JSONL trace
+
+    $ python -m repro.obs summarize trace.jsonl
+    $ python -m repro.obs check trace.jsonl --require-kinds run,round
+    $ python -m repro.obs diff a.jsonl b.jsonl --rel-tol 0.02
+    $ python -m repro.obs chrome trace.jsonl      # → Perfetto
+
+See trace.py (spans, wall+sim clocks, lazy device scalars), metrics.py
+(labeled counters/gauges/histograms), export.py (JSONL / Chrome trace /
+summarize / check / diff), record.py (RunRecorder: the runners' history
+dict as a view over the trace).
+"""
+
+from repro.obs.export import (chrome_trace, check, diff, provenance,
+                              read_jsonl, summarize, write_jsonl)
+from repro.obs.record import RunRecorder
+from repro.obs.trace import (NULL_TRACER, Lazy, NullTracer, Span, Tracer,
+                             annotate, close, configure, disable, get_tracer)
+
+
+def get_metrics():
+    """The active tracer's metric registry (a no-op registry when
+    tracing is disabled)."""
+    return get_tracer().metrics
+
+
+__all__ = [
+    "configure", "disable", "close", "get_tracer", "get_metrics",
+    "annotate", "Tracer", "NullTracer", "NULL_TRACER", "Span", "Lazy",
+    "RunRecorder", "read_jsonl", "write_jsonl", "chrome_trace",
+    "summarize", "check", "diff", "provenance",
+]

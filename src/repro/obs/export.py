@@ -1,0 +1,255 @@
+"""Trace export / reconstruction: JSONL IO, Chrome trace JSON, summaries.
+
+``summarize`` reconstructs the run-level accounting that the runners'
+``history`` dicts report — ``comm_gb``, ``sim_time_s``, per-phase secagg
+bytes — *from the trace alone*, to exact equality.  That works because the
+recorder (``repro.obs.record``) emits one round span per history round with
+the same integer byte counts, and spans land in the event list in the order
+the rounds accumulated, so folding ``(down + up) / 1e9`` over the event
+stream replays the identical float additions (plus the async runner's
+trailing ``inflight_comm`` event).  This is the acceptance contract the
+trace-parity tests pin.
+
+``chrome_trace`` converts the span list to Chrome trace-event JSON
+(``ph: "X"`` complete events, µs timestamps) loadable in Perfetto / chrome
+about://tracing.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import platform
+import subprocess
+import time
+
+SCHEMA_VERSION = 1
+EVENT_TYPES = ("meta", "span", "event", "metric")
+METRIC_KINDS = ("counter", "gauge", "histogram")
+
+
+def read_jsonl(path: str) -> list[dict]:
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def write_jsonl(path: str, events: list[dict]) -> None:
+    with open(path, "w") as f:
+        for ev in events:
+            f.write(json.dumps(ev) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace-event JSON (Perfetto-viewable)
+# ---------------------------------------------------------------------------
+
+def chrome_trace(events: list[dict]) -> dict:
+    out = [{"ph": "M", "name": "process_name", "pid": 0, "tid": 0,
+            "args": {"name": "repro"}}]
+    for e in events:
+        if e.get("type") == "span":
+            out.append({
+                "ph": "X", "name": e["name"], "cat": e["kind"],
+                "pid": 0, "tid": 0,
+                "ts": e["t0"] * 1e6, "dur": max(e["dur"], 0.0) * 1e6,
+                "args": dict(e.get("attrs") or {},
+                             sim_t0=e.get("sim_t0"),
+                             sim_dur=e.get("sim_dur"))})
+        elif e.get("type") == "event":
+            out.append({
+                "ph": "i", "name": e["name"], "s": "g",
+                "pid": 0, "tid": 0, "ts": e["t"] * 1e6,
+                "args": dict(e.get("attrs") or {}, sim_t=e.get("sim_t"))})
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+# ---------------------------------------------------------------------------
+# Summaries
+# ---------------------------------------------------------------------------
+
+def summarize(events: list[dict]) -> dict:
+    """Flat summary reconstructing the run's history-level accounting."""
+    spans = [e for e in events if e.get("type") == "span"]
+    kinds: dict[str, int] = {}
+    for s in spans:
+        kinds[s["kind"]] = kinds.get(s["kind"], 0) + 1
+
+    # comm_gb: replay the runners' per-round float accumulation in event
+    # order (round spans end in round order; inflight_comm trails) — see
+    # module docstring for why this is exact, not just close.
+    comm_gb = 0.0
+    sim_time_s = 0.0
+    n_rounds = down_bytes = up_bytes = 0
+    for e in events:
+        if e.get("type") == "span" and e.get("kind") == "round":
+            a = e.get("attrs") or {}
+            comm_gb += (a["down_bytes"] + a["up_bytes"]) / 1e9
+            sim_time_s = a.get("sim_time_s", sim_time_s)
+            down_bytes += a["down_bytes"]
+            up_bytes += a["up_bytes"]
+            n_rounds += 1
+        elif e.get("type") == "event" and e.get("name") == "inflight_comm":
+            a = e.get("attrs") or {}
+            comm_gb += (a["down_bytes"] + a["up_bytes"]) / 1e9
+
+    out = {"schema": SCHEMA_VERSION, "n_rounds": n_rounds,
+           "comm_gb": comm_gb, "sim_time_s": sim_time_s,
+           "down_bytes": down_bytes, "up_bytes": up_bytes, "spans": kinds}
+
+    for s in spans:
+        if s["kind"] == "run":
+            a = s.get("attrs") or {}
+            for k in ("runner", "final_acc", "wall_s"):
+                if k in a:
+                    out[k] = a[k]
+
+    phase_bytes: dict[str, dict] = {}
+    sa_rounds = recovery = dropped = 0
+    for s in spans:
+        a = s.get("attrs") or {}
+        if s["kind"] == "secagg-phase":
+            pb = phase_bytes.setdefault(s["name"], {"down": 0, "up": 0})
+            pb["down"] += a["down"]
+            pb["up"] += a["up"]
+        elif s["kind"] == "secagg":
+            sa_rounds += 1
+            recovery += a.get("recovery_bytes", 0)
+            dropped += a.get("n_dropped", 0)
+    if sa_rounds:
+        out["secagg"] = {"rounds": sa_rounds, "phase_bytes": phase_bytes,
+                         "recovery_bytes": recovery, "n_dropped": dropped}
+
+    metrics = {}
+    for e in events:
+        if e.get("type") == "metric":
+            lk = tuple(sorted((e.get("labels") or {}).items()))
+            key = lk and f"{e['name']}{{{','.join(f'{k}={v}' for k, v in lk)}}}" or e["name"]
+            metrics[key] = e["value"]
+    if metrics:
+        out["metrics"] = metrics
+    return out
+
+
+def flatten(d: dict, prefix: str = "") -> dict:
+    """Nested summary → dotted-key dict of numeric leaves (for diff)."""
+    out = {}
+    for k, v in d.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(flatten(v, key + "."))
+        elif isinstance(v, bool):
+            out[key] = int(v)
+        elif isinstance(v, (int, float)):
+            out[key] = v
+    return out
+
+
+def diff(sum_a: dict, sum_b: dict) -> dict:
+    """Key → {a, b, delta, rel} over the union of numeric summary leaves."""
+    fa, fb = flatten(sum_a), flatten(sum_b)
+    out = {}
+    for name in sorted(set(fa) | set(fb)):
+        va, vb = fa.get(name), fb.get(name)
+        ent = {"a": va, "b": vb}
+        if va is not None and vb is not None:
+            ent["delta"] = vb - va
+            # NaN-safe: NaN != NaN, and rel of a NaN delta is NaN
+            ent["rel"] = (vb - va) / abs(va) if va else (
+                0.0 if vb == va else float("inf"))
+        out[name] = ent
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Schema validation
+# ---------------------------------------------------------------------------
+
+def check(events: list[dict], require_kinds: list[str] | None = None
+          ) -> list[str]:
+    """Validate the trace's shape; returns problems (empty == valid)."""
+    problems: list[str] = []
+    if not events:
+        return ["empty trace"]
+    head = events[0]
+    if head.get("type") != "meta":
+        problems.append("first event is not a meta record")
+    elif head.get("schema") != SCHEMA_VERSION:
+        problems.append(f"schema {head.get('schema')!r} != {SCHEMA_VERSION}")
+    ids = set()
+    kinds = set()
+    for i, e in enumerate(events):
+        t = e.get("type")
+        if t not in EVENT_TYPES:
+            problems.append(f"event {i}: unknown type {t!r}")
+            continue
+        if t == "span":
+            missing = [k for k in ("id", "name", "kind", "t0", "dur",
+                                   "sim_t0", "sim_dur", "attrs")
+                       if k not in e]
+            if missing:
+                problems.append(f"span {i}: missing {missing}")
+                continue
+            if e["id"] in ids:
+                problems.append(f"span {i}: duplicate id {e['id']}")
+            ids.add(e["id"])
+            kinds.add(e["kind"])
+            if e["dur"] < 0:
+                problems.append(f"span {i}: negative dur {e['dur']}")
+            if not isinstance(e["attrs"], dict):
+                problems.append(f"span {i}: attrs is not a dict")
+            if e["kind"] == "round":
+                a = e.get("attrs") or {}
+                for k in ("down_bytes", "up_bytes"):
+                    v = a.get(k)
+                    if not isinstance(v, int) or v < 0:
+                        problems.append(
+                            f"round span {i}: bad {k} {v!r} (want int ≥ 0)")
+                if not isinstance(a.get("sim_time_s"), (int, float)):
+                    problems.append(f"round span {i}: missing sim_time_s")
+        elif t == "event":
+            if "name" not in e or "t" not in e:
+                problems.append(f"event {i}: missing name/t")
+        elif t == "metric":
+            if e.get("metric") not in METRIC_KINDS:
+                problems.append(
+                    f"metric {i}: unknown kind {e.get('metric')!r}")
+    # parents may close after their children; validate refs post-hoc
+    for i, e in enumerate(events):
+        if e.get("type") == "span" and e.get("parent") is not None \
+                and e["parent"] not in ids:
+            problems.append(f"span {i}: dangling parent {e['parent']}")
+    for k in require_kinds or ():
+        if k not in kinds:
+            problems.append(f"required span kind {k!r} absent")
+    return problems
+
+
+# ---------------------------------------------------------------------------
+# Provenance (trace meta + BENCH_* rows)
+# ---------------------------------------------------------------------------
+
+def provenance(extra: dict | None = None) -> dict:
+    """Commit / jax version / device kind / BENCH_QUICK — best effort,
+    never raises, never hard-imports jax."""
+    out = {"python": platform.python_version(),
+           "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
+           "bench_quick": os.environ.get("BENCH_QUICK", "")}
+    try:
+        r = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                           capture_output=True, text=True, timeout=10)
+        out["commit"] = r.stdout.strip() if r.returncode == 0 else "unknown"
+    except Exception:
+        out["commit"] = "unknown"
+    try:
+        import jax
+        out["jax"] = jax.__version__
+        dev = jax.devices()[0]
+        out["device"] = getattr(dev, "device_kind", dev.platform)
+        out["platform"] = dev.platform
+        out["n_devices"] = jax.device_count()
+    except Exception:
+        out["jax"] = out["device"] = out["platform"] = "unavailable"
+        out["n_devices"] = 0
+    if extra:
+        out.update(extra)
+    return out

@@ -1,0 +1,160 @@
+"""Labeled counters / gauges / histograms, stdlib-only.
+
+Instruments are registered per (name, sorted-label-set) pair, so
+``m.counter("pipeline.up_bytes", codec="signsgd", stage="stage2")`` returns
+the same accumulator on every call.  The registry lives on the process
+tracer (``repro.obs.trace``); when tracing is disabled every factory
+returns one shared no-op instrument — zero allocation, zero arithmetic on
+the hot path.
+
+Histograms keep exact count/sum/min/max and a bounded sample buffer
+(first ``SAMPLE_CAP`` observations) for percentile estimates; they never
+grow without bound.
+"""
+
+from __future__ import annotations
+
+SAMPLE_CAP = 4096
+
+
+def flat_key(name: str, labels: tuple) -> str:
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={v}" for k, v in labels)
+    return f"{name}{{{inner}}}"
+
+
+class Counter:
+    __slots__ = ("name", "labels", "value")
+    kind = "counter"
+
+    def __init__(self, name, labels):
+        self.name, self.labels = name, labels
+        self.value = 0
+
+    def inc(self, n=1):
+        self.value += n
+
+
+class Gauge:
+    __slots__ = ("name", "labels", "value")
+    kind = "gauge"
+
+    def __init__(self, name, labels):
+        self.name, self.labels = name, labels
+        self.value = 0.0
+
+    def set(self, v):
+        self.value = v
+
+
+class Histogram:
+    __slots__ = ("name", "labels", "count", "total", "vmin", "vmax",
+                 "_samples")
+    kind = "histogram"
+
+    def __init__(self, name, labels):
+        self.name, self.labels = name, labels
+        self.count = 0
+        self.total = 0.0
+        self.vmin = self.vmax = None
+        self._samples: list[float] = []
+
+    def observe(self, v):
+        v = float(v)
+        self.count += 1
+        self.total += v
+        self.vmin = v if self.vmin is None else min(self.vmin, v)
+        self.vmax = v if self.vmax is None else max(self.vmax, v)
+        if len(self._samples) < SAMPLE_CAP:
+            self._samples.append(v)
+
+    def summary(self) -> dict:
+        out = {"count": self.count, "sum": self.total,
+               "min": self.vmin, "max": self.vmax}
+        if self._samples:
+            s = sorted(self._samples)
+            for q, tag in ((0.5, "p50"), (0.9, "p90"), (0.99, "p99")):
+                out[tag] = s[min(len(s) - 1, int(round(q * (len(s) - 1))))]
+        return out
+
+    @property
+    def value(self):
+        return self.summary()
+
+
+class Metrics:
+    enabled = True
+
+    def __init__(self):
+        self._data: dict[tuple, object] = {}
+
+    def _get(self, cls, name, labels):
+        lk = tuple(sorted(labels.items()))
+        key = (name, lk)
+        inst = self._data.get(key)
+        if inst is None:
+            inst = self._data[key] = cls(name, lk)
+        elif not isinstance(inst, cls):
+            raise TypeError(f"metric {name!r} already registered as "
+                            f"{inst.kind}, requested {cls.kind}")
+        return inst
+
+    def counter(self, name, **labels) -> Counter:
+        return self._get(Counter, name, labels)
+
+    def gauge(self, name, **labels) -> Gauge:
+        return self._get(Gauge, name, labels)
+
+    def histogram(self, name, **labels) -> Histogram:
+        return self._get(Histogram, name, labels)
+
+    def snapshot(self) -> dict:
+        """Flat ``name{label=v,...} -> value`` dict (histograms summarize)."""
+        return {flat_key(name, lk): inst.value
+                for (name, lk), inst in sorted(self._data.items())}
+
+    def events(self) -> list[dict]:
+        """Metric events for the JSONL trace (emitted once, at close)."""
+        return [{"type": "metric", "metric": inst.kind, "name": name,
+                 "labels": dict(lk), "value": inst.value}
+                for (name, lk), inst in sorted(self._data.items())]
+
+
+class _NullInstrument:
+    __slots__ = ()
+    value = 0
+
+    def inc(self, n=1):
+        return None
+
+    def set(self, v):
+        return None
+
+    def observe(self, v):
+        return None
+
+    def summary(self):
+        return {}
+
+
+_NULL_INSTRUMENT = _NullInstrument()
+
+
+class NullMetrics:
+    enabled = False
+
+    def counter(self, name, **labels):
+        return _NULL_INSTRUMENT
+
+    gauge = counter
+    histogram = counter
+
+    def snapshot(self):
+        return {}
+
+    def events(self):
+        return []
+
+
+NULL_METRICS = NullMetrics()

@@ -1,0 +1,102 @@
+"""RunRecorder: the runners' ``history`` dict as a *view over the trace*.
+
+Every federated runner (sequential oracle, cohort, async — see
+``federated/server.py`` and ``fedsim/runner.py``) used to hand-maintain a
+history dict next to its own timing/byte bookkeeping.  RunRecorder IS that
+dict (it subclasses ``dict``, so every existing consumer — tests, benches,
+launchers — reads the same keys), but each mutation flows through a method
+that simultaneously emits the matching trace span or event.  One
+bookkeeping path; ``repro.obs.export.summarize`` reconstructs ``comm_gb``
+/ ``sim_time_s`` / secagg phase bytes from the trace to exact equality.
+
+Float-exactness contract: ``end_round`` accumulates
+``comm_gb += (down + up) / 1e9`` per round, in round order, exactly like
+the pre-refactor runners did — and stamps the same ints on the round span
+— so summarize's event-order fold replays identical float additions.
+The async runner's trailing in-flight bytes go through
+``inflight_comm`` (an event, ordered after every round span).
+"""
+
+from __future__ import annotations
+
+from repro.obs import trace as _trace
+
+
+class RunRecorder(dict):
+    def __init__(self, runner: str, fc=None, extra_keys=()):
+        super().__init__()
+        self._tr = _trace.get_tracer()
+        self["rounds"] = []
+        self["acc"] = []
+        self["comm_gb"] = 0.0
+        self["sim_time_s"] = 0.0
+        for k in extra_keys:
+            self[k] = []
+        attrs = {"runner": runner}
+        if fc is not None:
+            attrs.update(rounds=fc.rounds,
+                         clients_per_round=fc.clients_per_round,
+                         codec=fc.codec, secagg=fc.secagg, seed=fc.seed)
+        self._run_span = self._tr.begin("run", kind="run", **attrs)
+
+    # ---- spans -------------------------------------------------------------
+
+    def begin_round(self, rnd: int, phase: str = "fed"):
+        return self._tr.begin("round", kind="round", rnd=int(rnd),
+                              phase=phase)
+
+    def begin_client(self, cid: int, **attrs):
+        return self._tr.begin("client", kind="client", cid=int(cid), **attrs)
+
+    # ---- simulated clock ---------------------------------------------------
+
+    def add_sim(self, dt: float) -> None:
+        self["sim_time_s"] += dt
+        self._tr.sim_time = self["sim_time_s"]
+
+    def set_sim(self, t: float) -> None:
+        self["sim_time_s"] = t
+        self._tr.sim_time = t
+
+    # ---- round accounting --------------------------------------------------
+
+    def end_round(self, span, log, down: int, up: int) -> None:
+        """Append the RoundLog and accumulate comm — the one place either
+        happens (identical float op order to the historical runners)."""
+        self["rounds"].append(log)
+        self["comm_gb"] += (down + up) / 1e9
+        span.end(down_bytes=int(down), up_bytes=int(up),
+                 sim_time_s=self["sim_time_s"], comm_gb=self["comm_gb"],
+                 loss=log.loss, acc=log.acc)
+
+    def inflight_comm(self, down: int, up: int) -> None:
+        """Async: broadcasts/uploads in flight when the run ended were still
+        transmitted; they count toward comm but belong to no round."""
+        self["comm_gb"] += (down + up) / 1e9
+        self._tr.event("inflight_comm", down_bytes=int(down),
+                       up_bytes=int(up))
+
+    # ---- async event log (same schema the tracer emits) --------------------
+
+    def async_event(self, now: float, name: str, **attrs) -> None:
+        ev = {"type": "event", "name": name, "sim_t": round(now, 9),
+              "attrs": attrs}
+        self["events"].append(ev)
+        self._tr.event(name, sim_t=ev["sim_t"], **attrs)
+
+    # ---- privacy accounting ------------------------------------------------
+
+    def record_secagg(self, entry: dict) -> None:
+        self["secagg_rounds"].append(entry)
+
+    def record_eps(self, rnd: int, eps: float) -> None:
+        self["dp_eps"].append((rnd, eps))
+        self._tr.metrics.gauge("dp.epsilon").set(eps)
+
+    # ---- run close ---------------------------------------------------------
+
+    def finish(self) -> None:
+        self._run_span.end(final_acc=self.get("final_acc"),
+                           comm_gb=self["comm_gb"],
+                           sim_time_s=self["sim_time_s"],
+                           wall_s=self.get("wall_s"))

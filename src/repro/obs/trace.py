@@ -1,0 +1,296 @@
+"""Nested span tracing with wall-clock *and* simulated-clock timestamps.
+
+One process-wide tracer, off by default.  When disabled, ``get_tracer()``
+returns a shared :class:`NullTracer` whose every method is a no-op returning
+shared singletons — instrumented hot paths pay an attribute lookup and a
+call, never an allocation, a string format, or (critically) a host sync.
+
+When enabled (``configure(path=...)``), spans buffer in memory as plain
+dicts and are written once at ``close()`` as JSONL (one event per line; see
+``repro.obs.export`` for the schema, the Chrome-trace converter, and the
+``summarize``/``diff``/``check`` CLI).
+
+RL2 compliance (host-sync-in-hot-path): attribute values that live on
+device are recorded through :meth:`Span.lazy`, which stores the device
+value unresolved.  All pending lazies are resolved in ONE
+``jax.device_get`` batch at ``close()`` (or an explicit
+``resolve_pending()``, e.g. piggybacked on a round's existing batched
+pull) — instrumentation never adds per-span device→host transfers.
+
+The simulated clock is cooperative: runners publish their sim time via
+``tracer.sim_time`` (see ``repro.obs.record.RunRecorder``); every span
+stamps ``sim_t0``/``sim_dur`` from it alongside the wall clock.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+from repro.obs.metrics import Metrics, NULL_METRICS
+
+SCHEMA_VERSION = 1
+
+
+class Lazy:
+    """A deferred (possibly on-device) scalar attribute value.
+
+    Holds the raw value until the tracer's single batched resolve turns it
+    into a host float.  Serializes as its resolved value.
+    """
+
+    __slots__ = ("value", "resolved")
+
+    def __init__(self, value):
+        self.value = value
+        self.resolved = False
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return f"Lazy({self.value!r}, resolved={self.resolved})"
+
+
+def _json_default(o):
+    if isinstance(o, Lazy):
+        o = o.value
+    try:
+        return float(o)
+    except (TypeError, ValueError):
+        return repr(o)
+
+
+class Span:
+    """One timed region.  Usable as a context manager or via begin()/end()."""
+
+    __slots__ = ("name", "kind", "sid", "parent", "attrs", "_tr", "_t0",
+                 "_sim0", "_done")
+
+    def __init__(self, tracer, name, kind, sid, parent, attrs):
+        self._tr = tracer
+        self.name = name
+        self.kind = kind
+        self.sid = sid
+        self.parent = parent
+        self.attrs = attrs
+        self._t0 = tracer._now()
+        self._sim0 = tracer.sim_time
+        self._done = False
+
+    def set(self, **attrs) -> "Span":
+        self.attrs.update(attrs)
+        return self
+
+    def lazy(self, key, value) -> "Span":
+        """Record a device scalar without forcing a host sync (see module
+        docstring); resolved in one batch at close()."""
+        lz = Lazy(value)
+        self.attrs[key] = lz
+        self._tr._lazies.append(lz)
+        return self
+
+    def end(self, **attrs) -> None:
+        if self._done:
+            return
+        self._done = True
+        if attrs:
+            self.attrs.update(attrs)
+        tr = self._tr
+        if tr._stack and tr._stack[-1] == self.sid:
+            tr._stack.pop()
+        elif self.sid in tr._stack:
+            tr._stack.remove(self.sid)
+        tr._events.append({
+            "type": "span", "id": self.sid, "parent": self.parent,
+            "name": self.name, "kind": self.kind,
+            "t0": self._t0, "dur": tr._now() - self._t0,
+            "sim_t0": self._sim0, "sim_dur": tr.sim_time - self._sim0,
+            "attrs": self.attrs})
+
+    def __enter__(self) -> "Span":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.end()
+
+
+class Tracer:
+    """Buffering tracer: spans/events in memory, one JSONL write at close."""
+
+    enabled = True
+
+    def __init__(self, path: str | None = None, meta: dict | None = None):
+        self.path = path
+        self.sim_time = 0.0
+        self.metrics = Metrics()
+        self._t_origin = time.perf_counter()
+        self._events: list[dict] = [{
+            "type": "meta", "schema": SCHEMA_VERSION,
+            "t_epoch": time.time(), "meta": dict(meta or {})}]
+        self._stack: list[int] = []
+        self._next_id = 0
+        self._lazies: list[Lazy] = []
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._t_origin
+
+    def begin(self, name: str, kind: str = "span", **attrs) -> Span:
+        sid = self._next_id
+        self._next_id += 1
+        parent = self._stack[-1] if self._stack else None
+        self._stack.append(sid)
+        return Span(self, name, kind, sid, parent, attrs)
+
+    def span(self, name: str, kind: str = "span", **attrs) -> Span:
+        """Alias of begin(); Span is its own context manager."""
+        return self.begin(name, kind, **attrs)
+
+    def event(self, name: str, sim_t: float | None = None, **attrs) -> dict:
+        ev = {"type": "event", "name": name, "t": self._now(),
+              "sim_t": self.sim_time if sim_t is None else sim_t,
+              "attrs": attrs}
+        self._events.append(ev)
+        return ev
+
+    def resolve_pending(self) -> int:
+        """Resolve every Lazy attribute in ONE batched device→host pull."""
+        pend = [lz for lz in self._lazies if not lz.resolved]
+        self._lazies = []
+        if not pend:
+            return 0
+        vals = [lz.value for lz in pend]
+        try:
+            import jax
+            vals = jax.device_get(vals)
+        except Exception:
+            pass
+        for lz, v in zip(pend, vals):
+            try:
+                lz.value = float(v)
+            except (TypeError, ValueError):
+                lz.value = repr(v)
+            lz.resolved = True
+        return len(pend)
+
+    def events(self) -> list[dict]:
+        return self._events
+
+    def close(self) -> list[dict]:
+        """Resolve lazies, flush metrics into the event list, write JSONL
+        (when a path was configured), and disable this tracer."""
+        if not self.enabled:
+            return self._events
+        self.resolve_pending()
+        self._events.extend(self.metrics.events())
+        self.enabled = False
+        if self.path:
+            with open(self.path, "w") as f:
+                for ev in self._events:
+                    f.write(json.dumps(ev, default=_json_default) + "\n")
+        return self._events
+
+
+class _NullSpan:
+    """Shared do-nothing span: the disabled hot path allocates nothing."""
+
+    __slots__ = ()
+    attrs: dict = {}
+
+    def set(self, **attrs):
+        return self
+
+    def lazy(self, key, value):
+        return self
+
+    def end(self, **attrs):
+        return None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return None
+
+
+NULL_SPAN = _NullSpan()
+
+
+class NullTracer:
+    """Process-wide no-op tracer installed when tracing is disabled."""
+
+    enabled = False
+    path = None
+    sim_time = 0.0
+    metrics = NULL_METRICS
+
+    def begin(self, name, kind="span", **attrs):
+        return NULL_SPAN
+
+    span = begin
+
+    def event(self, name, sim_t=None, **attrs):
+        return None
+
+    def resolve_pending(self):
+        return 0
+
+    def events(self):
+        return []
+
+    def close(self):
+        return []
+
+
+NULL_TRACER = NullTracer()
+_TRACER: Tracer | NullTracer = NULL_TRACER
+
+
+def configure(path: str | None = None, enabled: bool = True,
+              meta: dict | None = None) -> Tracer | NullTracer:
+    """Install the process tracer.  ``enabled=False`` (or ``disable()``)
+    restores the shared no-op tracer."""
+    global _TRACER
+    _TRACER = Tracer(path=path, meta=meta) if enabled else NULL_TRACER
+    return _TRACER
+
+
+def disable() -> NullTracer:
+    global _TRACER
+    _TRACER = NULL_TRACER
+    return _TRACER
+
+
+def get_tracer() -> Tracer | NullTracer:
+    return _TRACER
+
+
+def close() -> list[dict]:
+    """Close the active tracer (flush + write) and restore the null one."""
+    global _TRACER
+    evs = _TRACER.close()
+    _TRACER = NULL_TRACER
+    return evs
+
+
+class _NullCtx:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return None
+
+
+_NULL_CTX = _NullCtx()
+
+
+def annotate(name: str):
+    """Optional ``jax.profiler`` trace annotation around a dispatch site
+    (cohort dispatch, BEA kernels).  A shared no-op context when tracing is
+    disabled or jax's profiler is unavailable — never a hard jax dep."""
+    if not _TRACER.enabled:
+        return _NULL_CTX
+    try:
+        from jax.profiler import TraceAnnotation
+        return TraceAnnotation(name)
+    except Exception:
+        return _NULL_CTX

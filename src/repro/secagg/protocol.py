@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as OBS
 from repro.core import importance as IMP
 from repro.core import masks as MK
 from repro.fedsim import transport as T
@@ -203,6 +204,34 @@ class PrivateAggregate:
     aborted: bool = False
 
 
+def _emit_secagg_trace(sa: SecAggRound, rnd: int) -> None:
+    """One ``secagg`` span with four ``secagg-phase`` children + per-phase
+    byte counters — the trace-side mirror of the history's secagg_rounds
+    entries (same PhaseCost ints, so summarize reconstructs them exactly)."""
+    tr = OBS.get_tracer()
+    if not tr.enabled:
+        return
+    with tr.span("secagg", kind="secagg", rnd=int(rnd),
+                 participants=len(sa.participants),
+                 survivors=len(sa.survivors),
+                 n_dropped=len(sa.dropped),
+                 recovery_bytes=int(sa.recovery_bytes),
+                 aborted=sa.aborted):
+        for name in PHASES:
+            pc = sa.phases[name]
+            tr.begin(name, kind="secagg-phase", down=int(pc.down),
+                     up=int(pc.up), time_s=pc.time_s).end()
+    m = tr.metrics
+    for name in PHASES:
+        pc = sa.phases[name]
+        m.counter("secagg.phase_bytes", phase=name,
+                  dir="down").inc(int(pc.down))
+        m.counter("secagg.phase_bytes", phase=name, dir="up").inc(int(pc.up))
+    m.counter("secagg.recovery_bytes").inc(int(sa.recovery_bytes))
+    if sa.aborted:
+        m.counter("secagg.aborted_rounds").inc()
+
+
 def wants_private(fc) -> bool:
     return (getattr(fc, "secagg", "off") != "off"
             or getattr(fc, "dp_clip", 0.0) > 0
@@ -287,6 +316,7 @@ def aggregate_round(bc: Any, uploads: list[Any],
                            field=field_spec(fc))
         sa = run_round(payloads, [int(c) for c in participants], dropped,
                        cfg, round_seed(fc, rnd), link_of)
+        _emit_secagg_trace(sa, rnd)
         if sa.aborted:
             return PrivateAggregate(bc, None, 0, sa, sa.up_bytes,
                                     sa.down_bytes, sa.time_s, aborted=True)

@@ -29,12 +29,13 @@ of shapes: (rank buckets) × (log2 n_slots) decode variants in total.
 
 from __future__ import annotations
 
-from collections import defaultdict
+from collections import defaultdict, deque
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as OBS
 from repro.pytree import is_meta, tree_bytes
 from repro.serving.registry import AdapterRegistry, RegistryFullError
 from repro.serving.scheduler import Request, Scheduler
@@ -109,7 +110,9 @@ class ServingEngine:
             jits = model._serving_jits = (prefill_fn, decode_fn)
         self._prefill_fn, self._decode_fn = jits
         self._stack_cache: dict[tuple, tuple] = {}
-        self.finished: list[Request] = []
+        # bounded retention (triage window); scheduler.n_finished holds the
+        # lifetime total — a sustained serving loop must not grow per-request
+        self.finished: deque[Request] = deque(maxlen=256)
         self.steps = 0
         self._deferred = 0
         self.decode_calls = 0
@@ -139,6 +142,8 @@ class ServingEngine:
         self.scheduler.step_count = self.steps
         self._deferred = 0
         self._prune_stacks()
+        ssp = OBS.get_tracer().begin("engine.step", kind="serving",
+                                     step=self.steps)
 
         to_defer = []
         for req in self.scheduler.admit():
@@ -146,7 +151,8 @@ class ServingEngine:
                 req.entry = self.registry.acquire(req.adapter_id)
             except KeyError:
                 self.scheduler.reject(
-                    req, f"unknown adapter {req.adapter_id!r}")
+                    req, f"unknown adapter {req.adapter_id!r}",
+                    kind="unknown_adapter")
                 continue
             except RegistryFullError:
                 to_defer.append(req)                  # retry next step
@@ -172,6 +178,9 @@ class ServingEngine:
                 req.entry = None
                 done.append(req)
         self.finished.extend(done)
+        ssp.end(running=self.scheduler.n_running,
+                waiting=self.scheduler.n_waiting, finished=len(done),
+                deferred=self._deferred)
         return done
 
     def run(self, max_steps: int | None = None) -> list[Request]:
@@ -197,10 +206,12 @@ class ServingEngine:
         n = req.prompt_len
         chunk = min(_pow2_floor(n), n) if self.chunk_prefill else n
         toks = jnp.asarray(req.prompt[:chunk], jnp.int32)[None]      # (1, C)
-        logits, new_cache = self._prefill_fn(
-            self.base, entry.adapters, entry.masks, toks,
-            self._zero_slot_cache)
+        with OBS.annotate("serve.prefill"):
+            logits, new_cache = self._prefill_fn(
+                self.base, entry.adapters, entry.masks, toks,
+                self._zero_slot_cache)
         self.prefill_calls += 1
+        OBS.get_metrics().counter("serve.prefill_tokens").inc(chunk)
         self.cache = jax.tree.map(
             lambda g, c: g.at[req.slot].set(c), self.cache, new_cache)
         req.n_cached = chunk
@@ -244,8 +255,10 @@ class ServingEngine:
                            jnp.int32)[:, None]        # (k_pad, 1, 1)
         ad, msk = self._stacked(padded)
         sub = jax.tree.map(lambda v: v[rows], self.cache)
-        logits, new_sub = self._decode_fn(self.base, ad, msk, toks, sub)
+        with OBS.annotate("serve.decode"):
+            logits, new_sub = self._decode_fn(self.base, ad, msk, toks, sub)
         self.decode_calls += 1
+        OBS.get_metrics().counter("serve.decode_tokens").inc(k)
         sampled = np.asarray(jnp.argmax(logits, axis=-1))  # (k_pad,)
         real = rows[:k]
         self.cache = jax.tree.map(
@@ -258,9 +271,10 @@ class ServingEngine:
     def stats(self) -> dict:
         s = {"steps": self.steps, "prefill_calls": self.prefill_calls,
              "decode_calls": self.decode_calls,
-             "finished": len(self.finished),
+             "finished": self.scheduler.n_finished,
              "running": self.scheduler.n_running,
              "waiting": self.scheduler.n_waiting,
+             "scheduler": self.scheduler.stats(),
              "registry": self.registry.stats()}
         s["cache"] = self.scheduler.slot_bytes(self.cache_slot_bytes)
         return s

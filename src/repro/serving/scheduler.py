@@ -12,7 +12,10 @@ Invariants (tested):
   - no two live requests ever share a cache slot;
   - a freed slot is reclaimed by the next admission;
   - a request whose prompt + budget cannot fit ``max_seq`` is rejected at
-    submit time rather than poisoning a slot.
+    submit time rather than poisoning a slot;
+  - retained request objects are bounded (``max_retained`` rejected requests
+    kept for triage); lifetime totals live in ``stats()`` counters, which are
+    also mirrored into ``repro.obs`` metrics when tracing is enabled.
 """
 
 from __future__ import annotations
@@ -23,6 +26,8 @@ from collections import deque
 from typing import Any
 
 import numpy as np
+
+from repro import obs as OBS
 
 WAITING = "waiting"
 RUNNING = "running"
@@ -75,7 +80,7 @@ class Request:
 
 
 class Scheduler:
-    def __init__(self, n_slots: int, max_seq: int):
+    def __init__(self, n_slots: int, max_seq: int, max_retained: int = 256):
         if n_slots < 1:
             raise ValueError("need at least one slot")
         self.n_slots = n_slots
@@ -85,7 +90,19 @@ class Scheduler:
         self._running: dict[int, Request] = {}      # slot -> request
         self._rid = itertools.count()
         self.step_count = 0
-        self.rejected: list[Request] = []
+        # bounded: the last max_retained rejections, for triage; lifetime
+        # totals are in the counters below (a long-lived serving loop must
+        # not accumulate one Request object per rejection forever)
+        self.rejected: deque[Request] = deque(maxlen=max_retained)
+        self.n_submitted = 0
+        self.n_admitted = 0
+        self.n_preempted = 0
+        self.n_finished = 0
+        self.rejects_by_reason: dict[str, int] = {}
+
+    def _count_reject(self, kind: str) -> None:
+        self.rejects_by_reason[kind] = self.rejects_by_reason.get(kind, 0) + 1
+        OBS.get_metrics().counter("sched.rejects", reason=kind).inc()
 
     # ---- intake ------------------------------------------------------------
 
@@ -95,6 +112,7 @@ class Scheduler:
                       prompt=np.asarray(prompt, np.int32).reshape(-1),
                       max_new_tokens=int(max_new_tokens), eos_id=eos_id,
                       submit_step=self.step_count)
+        self.n_submitted += 1
         if req.prompt_len == 0 or req.max_new_tokens < 1 or \
                 req.prompt_len + req.max_new_tokens > self.max_seq:
             req.state = REJECTED
@@ -103,6 +121,7 @@ class Scheduler:
                          f"max_new={req.max_new_tokens} <= "
                          f"max_seq={self.max_seq}")
             self.rejected.append(req)
+            self._count_reject("invalid")
             return req
         self._queue.append(req)
         return req
@@ -122,6 +141,9 @@ class Scheduler:
             req.start_step = self.step_count
             self._running[slot] = req
             admitted.append(req)
+        if admitted:
+            self.n_admitted += len(admitted)
+            OBS.get_metrics().counter("sched.admits").inc(len(admitted))
         return admitted
 
     def defer(self, req: Request) -> None:
@@ -133,8 +155,11 @@ class Scheduler:
         req.slot = None
         req.state = WAITING
         self._queue.appendleft(req)
+        self.n_preempted += 1
+        OBS.get_metrics().counter("sched.preemptions").inc()
 
-    def reject(self, req: Request, reason: str) -> None:
+    def reject(self, req: Request, reason: str,
+               kind: str = "runtime") -> None:
         """Drop an admitted request (e.g. unknown adapter); frees the slot."""
         assert req.slot is not None
         del self._running[req.slot]
@@ -143,6 +168,7 @@ class Scheduler:
         req.state = REJECTED
         req.error = reason
         self.rejected.append(req)
+        self._count_reject(kind)
 
     def running(self) -> list[Request]:
         return list(self._running.values())
@@ -154,8 +180,18 @@ class Scheduler:
         req.slot = None
         req.state = FINISHED
         req.finish_step = self.step_count
+        self.n_finished += 1
 
     # ---- introspection -----------------------------------------------------
+
+    def stats(self) -> dict:
+        """Lifetime admission-control counters (bounded, unlike the retained
+        request lists these replace as the source of truth)."""
+        return {"submitted": self.n_submitted, "admits": self.n_admitted,
+                "preemptions": self.n_preempted, "finished": self.n_finished,
+                "rejects": dict(self.rejects_by_reason),
+                "running": self.n_running, "waiting": self.n_waiting,
+                "free": self.n_free}
 
     @property
     def n_free(self) -> int:

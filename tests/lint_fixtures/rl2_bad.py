@@ -8,7 +8,7 @@ import numpy as np
 def step(x):
     m = np.mean(x)  # expect: RL2
     v = float(x.sum())  # expect: RL2
-    print(x)  # expect: RL2
+    print(x)  # expect: RL2, RL6
     return m + v
 
 

@@ -1,0 +1,16 @@
+"""RL6 fixture: bare print() in library code."""
+
+
+def aggregate(updates):
+    total = sum(updates)
+    print("aggregated", total)  # expect: RL6
+    return total
+
+
+class Server:
+    def finish(self, history):
+        print(f"final acc {history['final_acc']}")  # expect: RL6
+        return history
+
+
+print("module import side effect")  # expect: RL6

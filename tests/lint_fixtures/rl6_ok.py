@@ -1,0 +1,22 @@
+"""RL6 silent fixture: library code routing output through repro.obs (or a
+rebound non-builtin print), plus a suppressed escape hatch."""
+
+from repro import obs
+
+
+def aggregate(updates):
+    total = sum(updates)
+    obs.get_tracer().event("aggregated", total=total)
+    obs.get_metrics().counter("agg.updates").inc(len(updates))
+    return total
+
+
+def render(emit):
+    # locally bound callable named print is not the builtin
+    print = emit
+    print("not stdout")
+    return print
+
+
+def debug_dump(history):
+    print("escape hatch", history)  # lint: disable=RL6

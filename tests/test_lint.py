@@ -53,8 +53,8 @@ def test_fixture_exact_lines(name):
 
 def test_every_rule_family_has_firing_and_silent_fixture():
     ids = {r.id for r in all_rules()}
-    assert {"RL1", "RL2", "RL3", "RL4", "RL5"} <= ids
-    for rid in ("rl1", "rl2", "rl3", "rl4", "rl5"):
+    assert {"RL1", "RL2", "RL3", "RL4", "RL5", "RL6"} <= ids
+    for rid in ("rl1", "rl2", "rl3", "rl4", "rl5", "rl6"):
         assert f"{rid}_bad.py" in FIXTURES
         assert f"{rid}_ok.py" in FIXTURES
         _, expected, _ = run_fixture(f"{rid}_bad.py")
@@ -98,7 +98,7 @@ def test_src_tree_clean_against_committed_baseline():
 def test_list_rules_cli(capsys):
     assert lint_main(["--list-rules"]) == 0
     out = capsys.readouterr().out
-    for rid in ("RL1", "RL2", "RL3", "RL4", "RL5"):
+    for rid in ("RL1", "RL2", "RL3", "RL4", "RL5", "RL6"):
         assert rid in out
 
 

@@ -1,0 +1,449 @@
+"""repro.obs: span tracing, labeled metrics, JSONL export, and the
+trace-parity acceptance contract.
+
+The parity tests pin the tentpole guarantee: ``summarize`` reconstructs the
+runners' ``history``-level accounting (``comm_gb``, ``sim_time_s``, secagg
+per-phase bytes) from the JSONL trace alone, to EXACT equality — because
+the recorder emits one round span per history round with the same integer
+byte counts, in the same order, so the summary replays the identical float
+fold.
+
+Tracing is process-global state; every test that enables it restores the
+null tracer in a ``finally`` so ordering can't leak spans across tests.
+"""
+
+import json
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro import obs  # noqa: E402
+from repro.obs import export as E  # noqa: E402
+from repro.obs.__main__ import main as obs_main  # noqa: E402
+from repro.obs.metrics import NULL_METRICS, Metrics, SAMPLE_CAP  # noqa: E402
+from repro.obs.trace import NULL_SPAN, NULL_TRACER  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# tracer core
+# ---------------------------------------------------------------------------
+
+def test_trace_schema_roundtrip(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    try:
+        tr = obs.configure(path, meta={"cmd": "unit"})
+        with tr.span("run", kind="run", runner="seq"):
+            rsp = tr.begin("round", kind="round", rnd=0)
+            with tr.span("client", kind="client", cid=3):
+                pass
+            tr.event("dispatch", sim_t=1.5, cid=3)
+            rsp.end(down_bytes=10, up_bytes=20, sim_time_s=2.0)
+        tr.metrics.counter("pipeline.up_bytes", codec="signsgd").inc(20)
+        obs.close()
+    finally:
+        obs.disable()
+
+    events = E.read_jsonl(path)
+    assert E.check(events, require_kinds=["run", "round", "client"]) == []
+    assert events[0]["type"] == "meta"
+    assert events[0]["meta"]["cmd"] == "unit"
+    spans = {e["name"]: e for e in events if e["type"] == "span"}
+    # nesting: client under round under run
+    assert spans["client"]["parent"] == spans["round"]["id"]
+    assert spans["round"]["parent"] == spans["run"]["id"]
+    assert spans["run"]["parent"] is None
+    assert spans["round"]["attrs"]["down_bytes"] == 10
+    ev = next(e for e in events if e["type"] == "event")
+    assert ev["name"] == "dispatch" and ev["sim_t"] == 1.5
+    met = next(e for e in events if e["type"] == "metric")
+    assert met["metric"] == "counter" and met["value"] == 20
+    assert met["labels"] == {"codec": "signsgd"}
+
+
+def test_out_of_order_span_end_keeps_stack_sane():
+    try:
+        tr = obs.configure(None)
+        outer = tr.begin("outer")
+        inner = tr.begin("inner")
+        outer.end()                       # parent closed before child
+        inner.end()
+        child = tr.begin("later")         # must not re-parent under a ghost
+        child.end()
+        evs = tr.events()
+    finally:
+        obs.disable()
+    later = next(e for e in evs if e.get("name") == "later")
+    assert later["parent"] is None
+    # double-end is idempotent
+    assert sum(1 for e in evs if e.get("name") == "outer") == 1
+
+
+def test_disabled_tracer_is_shared_noop():
+    obs.disable()
+    tr = obs.get_tracer()
+    assert tr is NULL_TRACER and not tr.enabled
+    # every hot-path call returns shared singletons — no allocation
+    assert tr.begin("x", kind="round", rnd=1) is NULL_SPAN
+    assert tr.span("y") is NULL_SPAN
+    assert NULL_SPAN.set(a=1) is NULL_SPAN
+    assert NULL_SPAN.lazy("k", object()) is NULL_SPAN
+    assert tr.event("e", sim_t=0.0) is None
+    assert tr.events() == [] and tr.close() == []
+    assert tr.metrics is NULL_METRICS
+    c = tr.metrics.counter("n", codec="int8")
+    assert c is tr.metrics.gauge("m") is tr.metrics.histogram("h")
+    c.inc(5)
+    assert c.value == 0 and tr.metrics.snapshot() == {}
+    # annotate is a shared no-op context when disabled
+    ctx = obs.annotate("cohort_dispatch")
+    with ctx:
+        pass
+    assert ctx is obs.annotate("again")
+
+
+def test_lazy_attrs_resolve_in_one_batch(tmp_path):
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    path = str(tmp_path / "lazy.jsonl")
+    try:
+        tr = obs.configure(path)
+        sp = tr.begin("round", kind="round", rnd=0)
+        sp.lazy("loss", jnp.float32(0.25))
+        sp.end(down_bytes=0, up_bytes=0, sim_time_s=0.0)
+        assert tr.resolve_pending() == 1
+        assert sp.attrs["loss"].resolved and sp.attrs["loss"].value == 0.25
+        assert tr.resolve_pending() == 0          # drained
+        obs.close()
+    finally:
+        obs.disable()
+    (rnd,) = [e for e in E.read_jsonl(path) if e.get("type") == "span"]
+    assert rnd["attrs"]["loss"] == 0.25           # serialized resolved
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_label_identity_and_aggregation():
+    m = Metrics()
+    a = m.counter("up_bytes", codec="signsgd", stage="stage2")
+    b = m.counter("up_bytes", stage="stage2", codec="signsgd")
+    assert a is b                         # label order is irrelevant
+    a.inc(3)
+    b.inc(4)
+    assert a.value == 7
+    other = m.counter("up_bytes", codec="int8", stage="stage2")
+    assert other is not a and other.value == 0
+    m.gauge("eps").set(1.25)
+    h = m.histogram("resid")
+    for v in (1.0, 2.0, 3.0, 4.0, 5.0):
+        h.observe(v)
+    snap = m.snapshot()
+    assert snap["up_bytes{codec=signsgd,stage=stage2}"] == 7
+    assert snap["eps"] == 1.25
+    assert snap["resid"]["count"] == 5 and snap["resid"]["sum"] == 15.0
+    assert snap["resid"]["min"] == 1.0 and snap["resid"]["max"] == 5.0
+    assert snap["resid"]["p50"] == 3.0
+
+
+def test_metrics_kind_mismatch_raises():
+    m = Metrics()
+    m.counter("x")
+    with pytest.raises(TypeError):
+        m.gauge("x")
+
+
+def test_histogram_sample_buffer_is_bounded():
+    m = Metrics()
+    h = m.histogram("big")
+    for i in range(SAMPLE_CAP + 100):
+        h.observe(float(i))
+    assert h.count == SAMPLE_CAP + 100    # exact count survives the cap
+    assert len(h._samples) == SAMPLE_CAP
+    assert h.vmax == float(SAMPLE_CAP + 99)
+
+
+def test_metric_events_serialize_for_trace():
+    m = Metrics()
+    m.counter("n", phase="masked").inc(2)
+    (ev,) = m.events()
+    assert ev == {"type": "metric", "metric": "counter", "name": "n",
+                  "labels": {"phase": "masked"}, "value": 2}
+
+
+# ---------------------------------------------------------------------------
+# export: summarize / diff / check goldens
+# ---------------------------------------------------------------------------
+
+def _golden_events():
+    return [
+        {"type": "meta", "schema": 1, "t_epoch": 0.0, "meta": {}},
+        {"type": "span", "id": 0, "parent": None, "name": "run",
+         "kind": "run", "t0": 0.0, "dur": 1.0, "sim_t0": 0.0, "sim_dur": 3.0,
+         "attrs": {"runner": "seq", "final_acc": 0.5, "wall_s": 1.0}},
+        {"type": "span", "id": 1, "parent": 0, "name": "round",
+         "kind": "round", "t0": 0.0, "dur": 0.4, "sim_t0": 0.0,
+         "sim_dur": 1.5,
+         "attrs": {"rnd": 0, "down_bytes": 10, "up_bytes": 20,
+                   "sim_time_s": 1.5}},
+        {"type": "span", "id": 2, "parent": 0, "name": "round",
+         "kind": "round", "t0": 0.4, "dur": 0.4, "sim_t0": 1.5,
+         "sim_dur": 1.5,
+         "attrs": {"rnd": 1, "down_bytes": 30, "up_bytes": 40,
+                   "sim_time_s": 3.0}},
+        {"type": "span", "id": 3, "parent": 1, "name": "advertise",
+         "kind": "secagg-phase", "t0": 0.0, "dur": 0.0, "sim_t0": 0.0,
+         "sim_dur": 0.0, "attrs": {"down": 5, "up": 7, "time_s": 0.1}},
+        {"type": "span", "id": 4, "parent": 1, "name": "secagg",
+         "kind": "secagg", "t0": 0.0, "dur": 0.1, "sim_t0": 0.0,
+         "sim_dur": 0.0,
+         "attrs": {"rnd": 0, "recovery_bytes": 64, "n_dropped": 1}},
+        {"type": "event", "name": "inflight_comm", "t": 0.9, "sim_t": 3.0,
+         "attrs": {"down_bytes": 100, "up_bytes": 0}},
+        {"type": "metric", "metric": "counter", "name": "sched.admits",
+         "labels": {}, "value": 4},
+    ]
+
+
+def test_summarize_golden():
+    s = E.summarize(_golden_events())
+    assert s["n_rounds"] == 2
+    assert s["down_bytes"] == 40 and s["up_bytes"] == 60
+    # event-order float fold incl. the trailing inflight event
+    assert s["comm_gb"] == ((10 + 20) / 1e9 + (30 + 40) / 1e9
+                            + (100 + 0) / 1e9)
+    assert s["sim_time_s"] == 3.0
+    assert s["runner"] == "seq" and s["final_acc"] == 0.5
+    assert s["secagg"] == {"rounds": 1,
+                           "phase_bytes": {"advertise": {"down": 5, "up": 7}},
+                           "recovery_bytes": 64, "n_dropped": 1}
+    assert s["metrics"]["sched.admits"] == 4
+    assert s["spans"]["round"] == 2
+
+
+def test_check_golden_and_corruptions():
+    evs = _golden_events()
+    assert E.check(evs, require_kinds=["run", "round", "secagg"]) == []
+    assert E.check(evs, require_kinds=["pipeline"]) \
+        == ["required span kind 'pipeline' absent"]
+    assert E.check([]) == ["empty trace"]
+    bad = [dict(e) for e in evs]
+    bad[1] = dict(bad[1], id=2)                    # duplicate id
+    assert any("duplicate id" in p for p in E.check(bad))
+    bad = [dict(e) for e in evs]
+    bad[2] = dict(bad[2], attrs={"down_bytes": 1.5, "up_bytes": 0,
+                                 "sim_time_s": 0.0})
+    assert any("bad down_bytes" in p for p in E.check(bad))
+    assert any("not a meta record" in p for p in E.check(evs[1:]))
+    orphan = evs + [dict(evs[2], id=99, parent=98)]
+    assert any("dangling parent" in p for p in E.check(orphan))
+
+
+def test_diff_golden():
+    a = {"comm_gb": 1.0, "n_rounds": 2, "only_a": 5}
+    b = {"comm_gb": 1.1, "n_rounds": 2, "only_b": 7}
+    d = E.diff(a, b)
+    assert d["comm_gb"]["delta"] == pytest.approx(0.1)
+    assert d["comm_gb"]["rel"] == pytest.approx(0.1)
+    assert d["n_rounds"]["delta"] == 0
+    assert d["only_a"]["b"] is None and d["only_b"]["a"] is None
+
+
+def test_chrome_trace_golden():
+    ct = E.chrome_trace(_golden_events())
+    xs = [e for e in ct["traceEvents"] if e["ph"] == "X"]
+    assert len(xs) == 5
+    rnd = next(e for e in xs if e["name"] == "round")
+    assert rnd["ts"] == 0.0 and rnd["dur"] == pytest.approx(0.4e6)
+    assert any(e["ph"] == "i" and e["name"] == "inflight_comm"
+               for e in ct["traceEvents"])
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_summarize_check_diff_chrome(tmp_path, capsys):
+    p1 = str(tmp_path / "a.jsonl")
+    E.write_jsonl(p1, _golden_events())
+
+    assert obs_main(["check", p1, "--require-kinds", "run,round"]) == 0
+    assert "ok:" in capsys.readouterr().out
+    assert obs_main(["check", p1, "--require-kinds", "pipeline"]) == 1
+    assert "PROBLEM" in capsys.readouterr().err
+
+    assert obs_main(["summarize", p1, "--format", "json"]) == 0
+    s = json.loads(capsys.readouterr().out)
+    assert s["n_rounds"] == 2
+
+    evs2 = _golden_events()
+    evs2[2]["attrs"]["up_bytes"] = 400          # 10x regression in round 1
+    p2 = str(tmp_path / "b.jsonl")
+    E.write_jsonl(p2, evs2)
+    assert obs_main(["diff", p1, p2]) == 0      # no tolerance → report only
+    capsys.readouterr()
+    assert obs_main(["diff", p1, p2, "--rel-tol", "0.5"]) == 1
+    assert "FAIL" in capsys.readouterr().err
+
+    out = str(tmp_path / "c.json")
+    assert obs_main(["chrome", p1, "-o", out]) == 0
+    assert json.load(open(out))["traceEvents"]
+
+
+def test_cli_check_unreadable(tmp_path, capsys):
+    p = tmp_path / "garbage.jsonl"
+    p.write_text("not json\n")
+    assert obs_main(["check", str(p)]) == 1
+    assert "unreadable" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# trace-parity acceptance: history == summarize(trace), exactly
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.configs.distilbert import MINI
+    from repro.data.synthetic import make_classification
+    from repro.federated.partition import dirichlet_partition
+    cfg = MINI.with_(n_layers=1, layer_pattern=("attn",))
+    train = make_classification(400, 10, cfg.vocab_size, 24, seed=1)
+    test = make_classification(120, 10, cfg.vocab_size, 24, seed=2)
+    parts = dirichlet_partition(train.labels, 6, alpha=0.3, seed=0)
+    return cfg, train, test, parts
+
+
+def _traced_run(setup, path, **fc_kw):
+    from repro.federated.baselines import all_strategies
+    from repro.federated.server import FedConfig, run_federated
+    from repro.models import Model
+    cfg, train, test, parts = setup
+    rounds = fc_kw.pop("rounds", 2)
+    strat = all_strategies(rounds=rounds)[fc_kw.pop("strategy", "fedlora")]
+    model = Model(cfg, peft=strat.peft, unroll=True)
+    fc = FedConfig(rounds=rounds, clients_per_round=3, batch_size=16,
+                   max_local_batches=2, eval_every=rounds, lr=3e-3, **fc_kw)
+    try:
+        obs.configure(path, meta=obs.provenance({"cmd": "test"}))
+        h = run_federated(model, strat, parts, train, test, fc)
+        obs.close()
+    finally:
+        obs.disable()
+    return h
+
+
+def _assert_parity(h, s):
+    # EXACT float equality, not allclose: the summary replays the runner's
+    # own accumulation (this is the ISSUE's acceptance criterion)
+    assert s["comm_gb"] == h["comm_gb"]
+    assert s["sim_time_s"] == h["sim_time_s"]
+    assert s["n_rounds"] == len(h["rounds"])
+    assert s["down_bytes"] == sum(l.down_bytes for l in h["rounds"])
+    assert s["up_bytes"] == sum(l.up_bytes for l in h["rounds"])
+    if h.get("final_acc") == h.get("final_acc"):       # non-NaN
+        assert s["final_acc"] == h["final_acc"]
+
+
+def test_traced_secagg_signsgd_run_parity(setup, tmp_path):
+    """The issue's acceptance run: --secagg mask --codec signsgd with
+    dropout, traced; summarize reconstructs history exactly."""
+    path = str(tmp_path / "fed.jsonl")
+    h = _traced_run(setup, path, runner="cohort", secagg="mask",
+                    codec="signsgd", dropout=0.3, event_seed=3,
+                    secagg_threshold=0.5)
+    events = E.read_jsonl(path)
+    assert E.check(events, require_kinds=[
+        "run", "round", "client", "pipeline", "secagg", "secagg-phase"]) == []
+    s = E.summarize(events)
+    _assert_parity(h, s)
+    # per-phase secagg bytes: trace sums == history sums, int-exact
+    want = {}
+    for r in h["secagg_rounds"]:
+        for name, pc in r["phases"].items():
+            w = want.setdefault(name, {"down": 0, "up": 0})
+            w["down"] += pc["down"]
+            w["up"] += pc["up"]
+    assert s["secagg"]["phase_bytes"] == want
+    assert s["secagg"]["rounds"] == len(h["secagg_rounds"])
+    assert s["secagg"]["recovery_bytes"] == \
+        sum(r["recovery_bytes"] for r in h["secagg_rounds"])
+    # byte provenance metrics carry codec+stage labels
+    assert any(k.startswith("pipeline.up_bytes{") and "codec=signsgd" in k
+               for k in s.get("metrics", {}))
+
+
+def test_traced_async_run_parity(setup, tmp_path):
+    """Async: round spans + trailing inflight_comm event reproduce comm_gb
+    exactly; dict-normalized events survive the JSONL round-trip."""
+    path = str(tmp_path / "async.jsonl")
+    h = _traced_run(setup, path, runner="async", buffer_k=3,
+                    straggler=0.25, rounds=2)
+    events = E.read_jsonl(path)
+    assert E.check(events, require_kinds=["run", "round"]) == []
+    s = E.summarize(events)
+    _assert_parity(h, s)
+    assert all(ev["type"] == "event" and "sim_t" in ev
+               for ev in h["events"])      # satellite: normalized schema
+    # every history event is mirrored into the trace
+    traced = [e for e in events if e.get("type") == "event"
+              and e.get("name") in ("dispatch", "update")]
+    assert len(traced) == len(h["events"])
+
+
+def test_untraced_run_history_identical(setup):
+    """With tracing disabled the recorder is just a dict — same keys, same
+    values, no trace side channel."""
+    from repro.federated.baselines import all_strategies
+    from repro.federated.server import FedConfig, run_federated
+    from repro.models import Model
+    cfg, train, test, parts = setup
+    obs.disable()
+    strat = all_strategies(rounds=2)["fedlora"]
+    model = Model(cfg, peft=strat.peft, unroll=True)
+    fc = FedConfig(rounds=2, clients_per_round=3, batch_size=16,
+                   max_local_batches=2, eval_every=2, lr=3e-3)
+    h = run_federated(model, strat, parts, train, test, fc)
+    assert isinstance(h, dict)
+    assert np.isfinite(h["rounds"][-1].loss)
+    assert h["comm_gb"] > 0 and len(h["rounds"]) == 2
+    assert obs.get_tracer().events() == []
+
+
+def test_zero_round_run_guard(setup):
+    """rounds=0: both sync runners must report final_acc=NaN, not crash."""
+    from repro.federated.baselines import all_strategies
+    from repro.federated.server import FedConfig, run_federated
+    from repro.models import Model
+    cfg, train, test, parts = setup
+    for runner in ("seq", "cohort"):
+        strat = all_strategies(rounds=1)["fedlora"]
+        model = Model(cfg, peft=strat.peft, unroll=True)
+        fc = FedConfig(rounds=0, clients_per_round=3, batch_size=16,
+                       max_local_batches=2, eval_every=1, lr=3e-3,
+                       runner=runner)
+        h = run_federated(model, strat, parts, train, test, fc)
+        assert h["rounds"] == [] and h["comm_gb"] == 0.0
+        assert h["final_acc"] != h["final_acc"]        # NaN
+
+
+# ---------------------------------------------------------------------------
+# serving instrumentation
+# ---------------------------------------------------------------------------
+
+def test_scheduler_stats_and_bounded_retention():
+    from repro.serving.scheduler import Scheduler
+    sch = Scheduler(n_slots=2, max_seq=16, max_retained=3)
+    for _ in range(5):
+        sch.submit("t", np.arange(4), 0)       # invalid → rejected
+    ok = sch.submit("t", np.arange(4), 4)
+    sch.admit()
+    sch.reject(ok, "unknown adapter", kind="unknown_adapter")
+    st = sch.stats()
+    assert st["submitted"] == 6
+    assert st["rejects"] == {"invalid": 5, "unknown_adapter": 1}
+    assert st["admits"] == 1
+    assert len(sch.rejected) == 3              # bounded triage window
