@@ -28,6 +28,27 @@ def generate_local_masks(scores: Any, budget: int) -> Any:
     return IMP.unflatten(mask, layout)
 
 
+def vote_fractions(local_masks: list) -> dict[str, float]:
+    """Per-module mean voted-rank fraction across a cohort's local masks
+    (``{"a.b.c": frac}``, dotted paths as in ``pruning.dead_modules``) —
+    the importance attribution the trace recorder stamps on ``rank_alloc``
+    events alongside the arbitrated live/total counts."""
+    acc: dict[str, list[float]] = {}
+
+    def walk(msk, path):
+        if isinstance(msk, dict):
+            for k, v in msk.items():
+                walk(v, f"{path}.{k}" if path else k)
+            return
+        m = np.asarray(msk, bool)
+        acc.setdefault(path, []).append(float(m.mean()) if m.size else 0.0)
+
+    for lm in local_masks:
+        if lm:
+            walk(lm, "")
+    return {p: float(np.mean(v)) for p, v in acc.items()}
+
+
 def mask_and(a: Any, b: Any) -> Any:
     """Elementwise AND of two mask trees (monotone pruning)."""
     if isinstance(a, dict):

@@ -75,6 +75,28 @@ def dead_modules(masks: Any) -> list[str]:
     return out
 
 
+def module_rank_summary(masks: Any) -> dict[str, dict[str, int]]:
+    """Per-module live/total rank counts: ``{"a.b.c": {"live", "total"}}``.
+
+    Paths follow :func:`dead_modules`'s dotted convention; for stacked
+    modules the counts sum over the stacked layers, so ``live == 0`` iff
+    the module is in ``dead_modules(masks)``.  This is the payload the
+    trace recorder stamps on ``rank_alloc`` events (the paper's rank
+    trajectory, reconstructable offline)."""
+    out: dict[str, dict[str, int]] = {}
+
+    def walk(msk, path):
+        if isinstance(msk, dict):
+            for k, v in msk.items():
+                walk(v, f"{path}.{k}" if path else k)
+            return
+        m = np.asarray(msk, bool)
+        out[path] = {"live": int(m.sum()), "total": int(m.size)}
+
+    walk(masks, "")
+    return out
+
+
 def prune_structurally(trainable: Any, masks: Any) -> Any:
     """Remove fully-dead unstacked adapter modules from the trainable tree."""
     def walk(tr, msk):

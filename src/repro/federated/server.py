@@ -123,6 +123,12 @@ def evaluate(model, base, trainable, masks, test: Dataset, fc: FedConfig):
     ev = CL.make_eval_step(model, fc.task)
     rng = np.random.default_rng(0)
     total, vals = 0, []
+    # eval-kind span: the eval step legitimately jit-compiles on its first
+    # use (often during the *final* round), and obs.profile buckets compile
+    # spans under an eval ancestor separately from the round-loop flatness
+    # accounting — without this wrap, the first eval would read as a
+    # round-loop retrace
+    esp = OBS.get_tracer().begin("evaluate", kind="eval", task=fc.task)
     for i, batch in enumerate(batches(test, fc.batch_size, rng)):
         if i >= fc.eval_batches:
             break
@@ -136,6 +142,7 @@ def evaluate(model, base, trainable, masks, test: Dataset, fc: FedConfig):
             vals.append(ev(base, trainable, masks, jb))
     # device scalars accumulate without blocking dispatch; one transfer here
     vals = [float(v) for v in jax.device_get(vals)]
+    esp.end(n_batches=len(vals))
     if fc.task == "cls":
         return sum(vals) / max(total, 1)
     return float(np.mean(vals)) if vals else float("nan")
@@ -158,6 +165,24 @@ def _init_run(model, strategy, fc: FedConfig):
     opt = OPT.adam(OPT.linear_decay(fc.lr, total_steps))
     rng = np.random.default_rng(fc.seed)
     return base, trainable, masks, masks_np, n_rank_units, opt, rng
+
+
+def pin_params(tree, masks=None, sharding=None):
+    """Re-commit loop-carried state to one canonical placement.
+
+    Round 0's params are uncommitted host/eager arrays; from round 1 on they
+    are committed jit outputs.  The placement flip re-lowers (and re-compiles)
+    the *identical* jaxpr once — a silent multi-second duplicate XLA compile
+    of the client-step / cohort body.  Pinning the broadcast state every round
+    makes all dispatches lower against the same sharding, so compile counts
+    are flat after the first round (asserted in tests/test_obs.py via
+    obs.profile.compile_stats).
+    """
+    dst = sharding if sharding is not None else jax.devices()[0]
+    tree = jax.device_put(tree, dst)
+    if masks is not None:
+        masks = jax.device_put(masks, dst)
+    return tree, masks
 
 
 def _arbitrate(strategy, trainable, local_masks, masks, masks_np, rnd):
@@ -315,7 +340,7 @@ def _run_stage1(model, strategy, base, trainable, parts, train, fc, opt, rng,
             down += agg.down_bytes
             protocol_s = agg.time_s
         else:
-            base = pipe.aggregate(base, encoded)
+            base = pipe.aggregate(base, encoded, rnd=rnd)
             up = sum(e.nbytes for e in encoded)
         s1_stats["rounds"] += 1
         s1_stats["up_bytes"] += up
@@ -376,6 +401,7 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
                              adapters=COMM.prune_tree(trainable["adapters"],
                                                       masks_np))
         bc, down_per = pipe.broadcast(trainable, masks_np)
+        bc, masks = pin_params(bc, masks)
         down = down_per * len(sel)
         gate = strategy.optimizer_gate(bc, masks_np)
 
@@ -417,12 +443,17 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
             protocol_s = agg.time_s
         else:
             # ---- delta-space FedAvg --------------------------------------
-            trainable = pipe.aggregate(bc, encoded)
+            trainable = pipe.aggregate(bc, encoded, rnd=rnd)
             up = sum(e.nbytes for e in encoded)
             # ---- FedArb + RankDet ---------------------------------------
             trainable, masks, masks_np = _arbitrate(
                 strategy, trainable, local_masks, masks, masks_np, rnd)
             protocol_s = 0.0
+
+        # rank trajectory → trace (FedARA's per-round allocation decision)
+        if OBS.get_tracer().enabled and masks_np:
+            history.record_ranks(rnd, masks_np,
+                                 votes=MK.vote_fractions(local_masks))
 
         # ---- simulated wall clock: encoded bytes through per-device Links
         # (one transfer per client, like the cohort runner, so seq-vs-cohort
@@ -432,6 +463,9 @@ def run_federated(model, strategy, parts: list[np.ndarray], train: Dataset,
             int(cid), down_per, enc_of[int(cid)].nbytes,
             DV.compute_s(int(cid), fc.device_profile,
                          enc_of[int(cid)].n_steps)) for cid in sel]
+        if costs:
+            sc = sorted(costs)
+            rsp.set(cost_max=float(sc[-1]), cost_med=float(sc[len(sc) // 2]))
         history.add_sim((max(costs) if costs else 0.0) + protocol_s)
 
         live = int(MK.count_true(masks_np)) if masks_np else n_rank_units

@@ -289,10 +289,17 @@ class UploadPipeline:
                       stage=self.stage).inc()
             if clipped:
                 m.counter("dp.clip_events", stage=self.stage).inc()
+            ef_norm = 0.0
             if self.codec is not None:
+                ef_norm = float(np.linalg.norm(self._resid[upd.cid]))
                 m.histogram("pipeline.ef_residual_norm",
-                            codec=fc.codec).observe(
-                    float(np.linalg.norm(self._resid[upd.cid])))
+                            codec=fc.codec).observe(ef_norm)
+            # per-update encode event: the EF-residual stream the health
+            # monitor watches for codec blowup (plus clip/byte forensics)
+            OBS.get_tracer().event(
+                "encode", cid=int(upd.cid), norm=float(norm),
+                ef_norm=ef_norm, clipped=bool(clipped),
+                nbytes=int(nbytes), stage=self.stage)
         d_tree = self.unflatten(dec, upd.delta, masks_np)
         return EncodedUpdate(
             cid=upd.cid, wire=dec, delta=d_tree, nbytes=nbytes,
@@ -310,8 +317,35 @@ class UploadPipeline:
 
     # ---- aggregation -------------------------------------------------------
 
-    def aggregate(self, global_tree: Any, encoded: list[EncodedUpdate]
-                  ) -> Any:
+    def _emit_drift(self, encoded: list[EncodedUpdate],
+                    rnd: int | None = None) -> None:
+        """Client-drift dispersion of this aggregation's decoded wires:
+        ``1 − mean pairwise cosine`` over unit-normalized wires, computed as
+        ``(‖Σu‖² − n) / (n(n−1))`` — one O(n·d) pass, no pairwise matrix.
+        This is the FeDeRA-style heterogeneity signal; the health monitor
+        alerts when dispersion crosses its threshold."""
+        tr = OBS.get_tracer()
+        if not tr.enabled or len(encoded) < 2:
+            return
+        flat = [np.asarray(e.wire, np.float64).ravel() for e in encoded]
+        if len({w.size for w in flat}) != 1:
+            return      # async buffers can mix mask vintages → wire lengths
+        wires = np.stack(flat)
+        nrm = np.linalg.norm(wires, axis=1)
+        ok = nrm > 0
+        if int(ok.sum()) < 2:
+            return
+        u = wires[ok] / nrm[ok, None]
+        s = u.sum(axis=0)
+        n = len(u)
+        mean_cos = (float(s @ s) - n) / (n * (n - 1))
+        tr.event("drift", rnd=rnd, n=int(n), mean_cos=mean_cos,
+                 dispersion=1.0 - mean_cos)
+        tr.metrics.histogram("pipeline.drift_dispersion").observe(
+            1.0 - mean_cos)
+
+    def aggregate(self, global_tree: Any, encoded: list[EncodedUpdate],
+                  rnd: int | None = None) -> Any:
         """Plain weighted delta-space FedAvg applied to the broadcast state.
         With the identity codec this equals param-space FedAvg exactly:
         Σŵ·(bc+Δᵢ) = bc + Σŵ·Δᵢ."""
@@ -319,6 +353,7 @@ class UploadPipeline:
             return global_tree
         psp = OBS.get_tracer().begin("aggregate", kind="pipeline",
                                      n_updates=len(encoded))
+        self._emit_drift(encoded, rnd)
         w = np.asarray([e.weight for e in encoded], np.float64)
         w = (w / w.sum()).astype(np.float32)
 
@@ -340,6 +375,7 @@ class UploadPipeline:
         from repro.secagg import protocol as SA
         psp = OBS.get_tracer().begin("aggregate_private", kind="pipeline",
                                      n_updates=len(encoded))
+        self._emit_drift(encoded, int(rnd))
         out = SA.aggregate_round(bc, encoded, [int(c) for c in participants],
                                  masks_np, self.fc, rnd,
                                  link_of=self.link_of,

@@ -78,7 +78,11 @@ def run_cohort(model, strategy, parts, train, test, fc,
     base, trainable, masks, masks_np, n_rank_units, opt, rng = \
         SV._init_run(model, strategy, fc)
     step_fn = CL.make_train_step(model, opt, fc.task)     # ragged fallback
-    cohort_fn = CH.make_cohort_fn(model, opt, fc.task)
+    mesh = CH.cohort_mesh()
+    cohort_fn = CH.make_cohort_fn(model, opt, fc.task, mesh=mesh)
+    # broadcast state is pinned replicated-on-mesh so every dispatch lowers
+    # against the same sharding (see SV.pin_params)
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
     ndev = len(jax.devices())
     cpr = min(fc.clients_per_round, len(parts))
     c_pad = -(-cpr // ndev) * ndev                        # shardable cohort
@@ -109,6 +113,7 @@ def run_cohort(model, strategy, parts, train, test, fc,
                              adapters=COMM.prune_tree(trainable["adapters"],
                                                       masks_np))
         bc, down_per = pipe.broadcast(trainable, masks_np)
+        bc, masks = SV.pin_params(bc, masks, sharding=rep)
         down = down_per * len(sel)
         gate = strategy.optimizer_gate(bc, masks_np)
 
@@ -124,10 +129,20 @@ def run_cohort(model, strategy, parts, train, test, fc,
         cohort_idx = {}
         if cohort is not None:
             stacked = CH.stack_params(bc, len(cohort.weights))
+            # dispatch span keyed by shape signature: any jax compile fired
+            # inside parents under this span, so obs.profile attributes the
+            # compile to the exact argument shapes that caused the retrace
+            dsp = OBS.get_tracer().begin("cohort_dispatch", kind="dispatch")
+            if OBS.get_tracer().enabled:
+                from repro.obs import profile as PROF
+                dsp.set(sig=PROF.shape_signature(
+                    stacked, cohort.batches, cohort.step_mask,
+                    cohort.weights))
             with OBS.annotate("cohort_dispatch"):
                 pc, gc, lc, mc, avg = cohort_fn(
                     base, stacked, masks, gate, cohort.batches,
                     cohort.step_mask, cohort.weights)
+            dsp.end()
             lc, mc = np.asarray(lc, np.float32), np.asarray(mc, np.float32)
             cohort_idx = {cid: i for i, cid in enumerate(cohort.cids)}
             # One batched device→host pull for the whole cohort; the
@@ -209,9 +224,14 @@ def run_cohort(model, strategy, parts, train, test, fc,
                 # pipeline's delta-space mean (Σŵ(bc+Δ) = bc + ΣŵΔ)
                 trainable = avg
             else:
-                trainable = pipe.aggregate(bc, encoded)
+                trainable = pipe.aggregate(bc, encoded, rnd=rnd)
             trainable, masks, masks_np = SV._arbitrate(
                 strategy, trainable, local_masks, masks, masks_np, rnd)
+
+        # rank trajectory → trace (FedARA's per-round allocation decision)
+        if OBS.get_tracer().enabled and masks_np:
+            history.record_ranks(rnd, masks_np,
+                                 votes=MK.vote_fractions(local_masks))
 
         # ---- simulated wall clock (barrier = slowest surviving client) --
         enc_of = {e.cid: e for e in encoded}
@@ -224,6 +244,9 @@ def run_cohort(model, strategy, parts, train, test, fc,
                 cid, down_per, enc_of[cid].nbytes,
                 _compute_s(cid, fc, enc_of[cid].n_steps, slows[k])))
         round_s = (max(costs) if costs else 0.0) + protocol_s
+        if costs:
+            sc = sorted(costs)
+            rsp.set(cost_max=float(sc[-1]), cost_med=float(sc[len(sc) // 2]))
         history.add_sim(round_s)
 
         live = int(MK.count_true(masks_np)) if masks_np else n_rank_units
@@ -296,6 +319,7 @@ def run_async(model, strategy, parts, train, test, fc,
         # per-client DeltaChannel: a stale client's broadcast stream is
         # delta-coded against *its own* last reconstruction
         bc, down = pipe.broadcast(trainable, masks_np, endpoint=cid)
+        bc, bc_masks = SV.pin_params(bc, masks)
         pend_down += down
         n_b = _n_local_batches(len(parts[cid]), fc)
         link = T.link_for(device_of(cid))
@@ -304,7 +328,7 @@ def run_async(model, strategy, parts, train, test, fc,
                   + link.transfer_s(down))
         gate = strategy.optimizer_gate(bc, masks_np)
         if not dropped:
-            stash[seq_no] = (bc, masks, masks_np, gate, version)
+            stash[seq_no] = (bc, bc_masks, masks_np, gate, version)
         heapq.heappush(heap, (finish, seq_no, cid, dropped))
         history.async_event(now, "dispatch", cid=cid, version=version,
                             dropped=dropped)
@@ -348,7 +372,7 @@ def run_async(model, strategy, parts, train, test, fc,
             # tree space keeps stale and fresh contributions aligned)
             rsp = history.begin_round(agg)
             trainable = pipe.aggregate(trainable,
-                                       [b[0] for b in buffer])
+                                       [b[0] for b in buffer], rnd=agg)
             local_masks = []
             if strategy.uses_masks():
                 for _, pk, gk, *_ in buffer:
@@ -357,6 +381,9 @@ def run_async(model, strategy, parts, train, test, fc,
                         n_rank_units))
             trainable, masks, masks_np = SV._arbitrate(
                 strategy, trainable, local_masks, masks, masks_np, agg)
+            if OBS.get_tracer().enabled and masks_np:
+                history.record_ranks(agg, masks_np,
+                                     votes=MK.vote_fractions(local_masks))
             live = (int(MK.count_true(masks_np)) if masks_np
                     else n_rank_units)
             n_dead = len(PR.dead_modules(masks_np)) if masks_np else 0

@@ -11,18 +11,27 @@ zero-cost surface.
     obs.close()                      # writes the JSONL trace
 
     $ python -m repro.obs summarize trace.jsonl
-    $ python -m repro.obs check trace.jsonl --require-kinds run,round
+    $ python -m repro.obs check trace.jsonl --require-kinds run,round \\
+          --require-metrics pipeline.up_bytes
     $ python -m repro.obs diff a.jsonl b.jsonl --rel-tol 0.02
     $ python -m repro.obs chrome trace.jsonl      # → Perfetto
+    $ python -m repro.obs report trace.jsonl -o report.html
+    $ python -m repro.obs regress fresh_BENCH.json BENCH_fedsim.json
 
 See trace.py (spans, wall+sim clocks, lazy device scalars), metrics.py
 (labeled counters/gauges/histograms), export.py (JSONL / Chrome trace /
-summarize / check / diff), record.py (RunRecorder: the runners' history
-dict as a view over the trace).
+summarize / check / diff / rank_trajectory), record.py (RunRecorder: the
+runners' history dict as a view over the trace, rank_alloc events),
+health.py (streaming alert detectors), profile.py (compile accounting +
+memory watermarks), regress.py (bench regression sentinel), report.py
+(static HTML/terminal report).
 """
 
 from repro.obs.export import (chrome_trace, check, diff, provenance,
-                              read_jsonl, summarize, write_jsonl)
+                              rank_trajectory, read_jsonl, summarize,
+                              write_jsonl)
+from repro.obs.health import HealthMonitor, Thresholds
+from repro.obs.health import scan as health_scan
 from repro.obs.record import RunRecorder
 from repro.obs.trace import (NULL_TRACER, Lazy, NullTracer, Span, Tracer,
                              annotate, close, configure, disable, get_tracer)
@@ -38,5 +47,6 @@ __all__ = [
     "configure", "disable", "close", "get_tracer", "get_metrics",
     "annotate", "Tracer", "NullTracer", "NULL_TRACER", "Span", "Lazy",
     "RunRecorder", "read_jsonl", "write_jsonl", "chrome_trace",
-    "summarize", "check", "diff", "provenance",
+    "summarize", "check", "diff", "provenance", "rank_trajectory",
+    "HealthMonitor", "Thresholds", "health_scan",
 ]

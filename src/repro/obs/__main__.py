@@ -1,16 +1,28 @@
-"""Trace triage CLI: ``python -m repro.obs summarize|diff|check|chrome``.
+"""Trace triage CLI:
+``python -m repro.obs summarize|diff|check|chrome|regress|report``.
 
   summarize trace.jsonl [--format human|json]
       Reconstruct run-level accounting (comm_gb / sim_time_s / secagg
-      phase bytes / span counts / metrics) from the JSONL trace.
+      phase bytes / rank trajectory / alerts / compiles / metrics) from
+      the JSONL trace.
   diff a.jsonl b.jsonl [--rel-tol X] [--format human|json]
       Numeric summary deltas between two runs; with --rel-tol, exit 1 when
       any shared key moved by more than X (relative).
   check trace.jsonl [--require-kinds run,round,...]
+        [--require-metrics pipeline.up_bytes,...]
       Schema validation; exit 1 on any problem (CI gate).
   chrome trace.jsonl [-o out.json]
       Convert to Chrome trace-event JSON (load in Perfetto or
-      about://tracing).
+      about://tracing).  An empty / span-less trace converts to a valid
+      (empty) Chrome trace rather than erroring.
+  regress fresh_BENCH.json committed_BENCH.json [--time-tol ...]
+      Bench regression sentinel: noise-aware comparison of a fresh bench
+      run against the committed trajectory; exit 1 on regression (CI
+      gate — see ``repro.obs.regress``).
+  report trace.jsonl [-o report.html]
+      Static report (rank heatmap, bytes by codec × stage, alert
+      timeline, compile counts); terminal rendering by default, one
+      self-contained HTML file with -o.
 
 Stdlib-only, like the rest of ``repro.obs`` — runs before any jax install.
 """
@@ -44,12 +56,13 @@ def _cmd_summarize(args) -> int:
 
 def _cmd_check(args) -> int:
     kinds = [k for k in (args.require_kinds or "").split(",") if k]
+    mets = [m for m in (args.require_metrics or "").split(",") if m]
     try:
         events = E.read_jsonl(args.trace)
     except (OSError, json.JSONDecodeError) as e:
         print(f"unreadable trace: {e}", file=sys.stderr)
         return 1
-    problems = E.check(events, require_kinds=kinds)
+    problems = E.check(events, require_kinds=kinds, require_metrics=mets)
     for p in problems:
         print(f"PROBLEM: {p}", file=sys.stderr)
     if not problems:
@@ -94,6 +107,37 @@ def _cmd_chrome(args) -> int:
     return 0
 
 
+def _cmd_regress(args) -> int:
+    from repro.obs import regress as R
+    tol = R.Tolerances(time_tol=args.time_tol,
+                       speedup_tol=args.speedup_tol,
+                       byte_tol=args.byte_tol,
+                       metric_tol=args.metric_tol)
+    try:
+        fresh, committed = R.load(args.fresh), R.load(args.committed)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"unreadable bench json: {e}", file=sys.stderr)
+        return 1
+    res = R.compare(fresh, committed, tol)
+    if args.format == "json":
+        print(json.dumps(res, indent=1))
+    else:
+        print(R.format_report(res, args.fresh, args.committed))
+    return 0 if res["ok"] else 1
+
+
+def _cmd_report(args) -> int:
+    from repro.obs import report as REP
+    rep = REP.build_report(E.read_jsonl(args.trace))
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(REP.render_html(rep))
+        print(f"wrote {args.out}")
+    else:
+        print(REP.render_text(rep))
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.obs",
                                  description=__doc__.splitlines()[0])
@@ -108,6 +152,8 @@ def main(argv=None) -> int:
     p.add_argument("trace")
     p.add_argument("--require-kinds", default="",
                    help="comma-separated span kinds that must be present")
+    p.add_argument("--require-metrics", default="",
+                   help="comma-separated metric names that must be present")
     p.set_defaults(fn=_cmd_check)
 
     p = sub.add_parser("diff", help="run-to-run summary regression diff")
@@ -122,6 +168,27 @@ def main(argv=None) -> int:
     p.add_argument("trace")
     p.add_argument("-o", "--out", default=None)
     p.set_defaults(fn=_cmd_chrome)
+
+    p = sub.add_parser("regress",
+                       help="bench regression sentinel (CI gate)")
+    p.add_argument("fresh", help="fresh BENCH_*.json")
+    p.add_argument("committed", help="committed BENCH_*.json baseline")
+    p.add_argument("--time-tol", type=float, default=0.75,
+                   help="allowed one-sided slowdown fraction (default .75)")
+    p.add_argument("--speedup-tol", type=float, default=0.5,
+                   help="allowed one-sided speedup shrink (default .5)")
+    p.add_argument("--byte-tol", type=float, default=1e-6,
+                   help="two-sided relative byte drift (default 1e-6)")
+    p.add_argument("--metric-tol", type=float, default=0.15,
+                   help="two-sided relative loss/acc drift (default .15)")
+    p.add_argument("--format", choices=["human", "json"], default="human")
+    p.set_defaults(fn=_cmd_regress)
+
+    p = sub.add_parser("report", help="static run report from the JSONL")
+    p.add_argument("trace")
+    p.add_argument("-o", "--out", default=None,
+                   help="write self-contained HTML here (default: terminal)")
+    p.set_defaults(fn=_cmd_report)
 
     args = ap.parse_args(argv)
     return args.fn(args)

@@ -83,14 +83,18 @@ def summarize(events: list[dict]) -> dict:
     for e in events:
         if e.get("type") == "span" and e.get("kind") == "round":
             a = e.get("attrs") or {}
-            comm_gb += (a["down_bytes"] + a["up_bytes"]) / 1e9
+            # tolerant .get: synthetic / partial traces (health fixtures,
+            # hand-built repros) may omit byte attrs — summarize must
+            # degrade, not crash (``check`` is where strictness lives)
+            dn, up = a.get("down_bytes", 0), a.get("up_bytes", 0)
+            comm_gb += (dn + up) / 1e9
             sim_time_s = a.get("sim_time_s", sim_time_s)
-            down_bytes += a["down_bytes"]
-            up_bytes += a["up_bytes"]
+            down_bytes += dn
+            up_bytes += up
             n_rounds += 1
         elif e.get("type") == "event" and e.get("name") == "inflight_comm":
             a = e.get("attrs") or {}
-            comm_gb += (a["down_bytes"] + a["up_bytes"]) / 1e9
+            comm_gb += (a.get("down_bytes", 0) + a.get("up_bytes", 0)) / 1e9
 
     out = {"schema": SCHEMA_VERSION, "n_rounds": n_rounds,
            "comm_gb": comm_gb, "sim_time_s": sim_time_s,
@@ -109,8 +113,8 @@ def summarize(events: list[dict]) -> dict:
         a = s.get("attrs") or {}
         if s["kind"] == "secagg-phase":
             pb = phase_bytes.setdefault(s["name"], {"down": 0, "up": 0})
-            pb["down"] += a["down"]
-            pb["up"] += a["up"]
+            pb["down"] += a.get("down", 0)
+            pb["up"] += a.get("up", 0)
         elif s["kind"] == "secagg":
             sa_rounds += 1
             recovery += a.get("recovery_bytes", 0)
@@ -118,6 +122,35 @@ def summarize(events: list[dict]) -> dict:
     if sa_rounds:
         out["secagg"] = {"rounds": sa_rounds, "phase_bytes": phase_bytes,
                          "recovery_bytes": recovery, "n_dropped": dropped}
+
+    # alerts: the health monitor's embedded events, by type (forensics —
+    # no live-process state needed, the JSONL carries them)
+    from repro.obs import health as H
+    alerts = H.embedded_alerts(events)
+    by_type: dict[str, int] = {}
+    for a in alerts:
+        k = a.get("alert", "?")
+        by_type[k] = by_type.get(k, 0) + 1
+    out["alerts"] = {"n": len(alerts), "by_type": by_type}
+
+    # compile accounting (repro.obs.profile): is the round loop flat?
+    from repro.obs import profile as P
+    cs = P.compile_stats(events)
+    if cs["by_stage"]:
+        out["compiles"] = {"backend": cs["n"], "eval": cs["eval"],
+                           "setup": cs["setup"],
+                           "after_first_round": cs["after_first_round"],
+                           "total_s": cs["total_s"]}
+
+    # rank trajectory (FedARA's whole point): final live/total budget and
+    # prune count from the recorder's rank_alloc events
+    traj = rank_trajectory(events)
+    if traj["rounds"]:
+        last = traj["rounds"][-1]
+        out["ranks"] = {"rounds": len(traj["rounds"]),
+                        "final_live": traj["live"][last],
+                        "total": traj["total"],
+                        "n_pruned": len(traj["pruned"])}
 
     metrics = {}
     for e in events:
@@ -127,6 +160,43 @@ def summarize(events: list[dict]) -> dict:
             metrics[key] = e["value"]
     if metrics:
         out["metrics"] = metrics
+    return out
+
+
+def rank_trajectory(events: list[dict]) -> dict:
+    """Reconstruct the per-module rank trajectory from ``rank_alloc`` /
+    ``module_pruned`` events alone (the recorder emits one per arbitration —
+    see ``repro.obs.record.RunRecorder.record_ranks``).
+
+    Returns::
+
+      {"rounds": [rnd, ...],                  # in event order
+       "modules": {path: {rnd: live_ranks}},  # per-module trajectory
+       "total":   total rank budget (Σ per-module totals, last seen),
+       "live":    {rnd: Σ live ranks},
+       "pruned":  [{"rnd": r, "module": path}, ...]}
+    """
+    out = {"rounds": [], "modules": {}, "total": 0, "live": {},
+           "pruned": []}
+    for e in events:
+        if e.get("type") != "event":
+            continue
+        a = e.get("attrs") or {}
+        if e.get("name") == "rank_alloc":
+            rnd = a.get("rnd")
+            out["rounds"].append(rnd)
+            total = live = 0
+            for mod, info in (a.get("modules") or {}).items():
+                ml = info.get("live", 0) if isinstance(info, dict) else info
+                mt = info.get("total", 0) if isinstance(info, dict) else 0
+                out["modules"].setdefault(mod, {})[rnd] = ml
+                total += mt
+                live += ml
+            out["total"] = total or a.get("total", out["total"])
+            out["live"][rnd] = live if total else a.get("live", live)
+        elif e.get("name") == "module_pruned":
+            out["pruned"].append({"rnd": a.get("rnd"),
+                                  "module": a.get("module")})
     return out
 
 
@@ -164,9 +234,13 @@ def diff(sum_a: dict, sum_b: dict) -> dict:
 # Schema validation
 # ---------------------------------------------------------------------------
 
-def check(events: list[dict], require_kinds: list[str] | None = None
-          ) -> list[str]:
-    """Validate the trace's shape; returns problems (empty == valid)."""
+def check(events: list[dict], require_kinds: list[str] | None = None,
+          require_metrics: list[str] | None = None) -> list[str]:
+    """Validate the trace's shape; returns problems (empty == valid).
+
+    ``require_kinds`` / ``require_metrics`` demand span kinds and metric
+    *names* (labels ignored) — the CI gates use them to assert a traced run
+    actually recorded what it claims to."""
     problems: list[str] = []
     if not events:
         return ["empty trace"]
@@ -177,6 +251,7 @@ def check(events: list[dict], require_kinds: list[str] | None = None
         problems.append(f"schema {head.get('schema')!r} != {SCHEMA_VERSION}")
     ids = set()
     kinds = set()
+    metric_names = set()
     for i, e in enumerate(events):
         t = e.get("type")
         if t not in EVENT_TYPES:
@@ -213,6 +288,8 @@ def check(events: list[dict], require_kinds: list[str] | None = None
             if e.get("metric") not in METRIC_KINDS:
                 problems.append(
                     f"metric {i}: unknown kind {e.get('metric')!r}")
+            if "name" in e:
+                metric_names.add(e["name"])
     # parents may close after their children; validate refs post-hoc
     for i, e in enumerate(events):
         if e.get("type") == "span" and e.get("parent") is not None \
@@ -221,6 +298,9 @@ def check(events: list[dict], require_kinds: list[str] | None = None
     for k in require_kinds or ():
         if k not in kinds:
             problems.append(f"required span kind {k!r} absent")
+    for m in require_metrics or ():
+        if m not in metric_names:
+            problems.append(f"required metric {m!r} absent")
     return problems
 
 

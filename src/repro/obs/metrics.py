@@ -69,12 +69,20 @@ class Histogram:
         if len(self._samples) < SAMPLE_CAP:
             self._samples.append(v)
 
+    def quantile(self, q: float) -> float | None:
+        """Nearest-rank quantile over the sample buffer (None when empty)."""
+        if not self._samples:
+            return None
+        s = sorted(self._samples)
+        return s[min(len(s) - 1, int(round(q * (len(s) - 1))))]
+
     def summary(self) -> dict:
         out = {"count": self.count, "sum": self.total,
                "min": self.vmin, "max": self.vmax}
         if self._samples:
             s = sorted(self._samples)
-            for q, tag in ((0.5, "p50"), (0.9, "p90"), (0.99, "p99")):
+            for q, tag in ((0.5, "p50"), (0.9, "p90"), (0.95, "p95"),
+                           (0.99, "p99")):
                 out[tag] = s[min(len(s) - 1, int(round(q * (len(s) - 1))))]
         return out
 

@@ -1,0 +1,226 @@
+"""Performance forensics: compile/retrace accounting, device-memory
+watermarks, and the per-signature dispatch attribution they hang off.
+
+Compile accounting
+------------------
+``install()`` registers ONE process-wide ``jax.monitoring`` duration
+listener (jax offers no unregistration, so the listener outlives any single
+tracer and routes to whatever tracer is active — a no-op while tracing is
+disabled).  Every jax compile stage (``jaxpr_trace``,
+``jaxpr_to_mlir_module``, ``backend_compile``) lands in the trace as a
+completed ``compile``-kind span parented under the innermost *open* span —
+the round / dispatch / eval span that triggered it.  The cohort runner
+wraps its whole-round dispatch in a ``dispatch`` span stamped with
+``shape_signature(...)``, so compile spans are keyed by the exact shape
+signature that caused them.
+
+``compile_stats(events)`` is the offline side: per-round / per-signature /
+per-stage compile counts and seconds from the JSONL alone.  This turns the
+ROADMAP's "the cohort round loop should be flat after round 1" from a hope
+into an assertion (``tests/test_obs.py`` pins zero backend compiles after
+round 1 on a traced cohort run) — and ``obs report`` shows the counts.
+
+Memory watermarks
+-----------------
+``sample_memory(tracer)`` records each device's ``memory_stats()``
+(bytes_in_use / peak_bytes_in_use) as one ``memory`` event + gauges; the
+recorder calls it at round boundaries.  Best-effort: CPU backends expose no
+memory stats and the sample silently records nothing.
+
+Device-time attribution
+-----------------------
+``self_times(events)`` charges wall time to the span that spent it
+(duration minus direct children), with nested compile time carved out per
+row — so "where did the round go" separates device execute from compile
+from host-side orchestration, per span kind, from the JSONL alone.
+
+The listener half needs jax; everything consuming a written trace
+(``compile_stats``, ``self_times``) is stdlib-only like the rest of
+``repro.obs``.
+"""
+
+from __future__ import annotations
+
+from repro.obs import trace as _trace
+
+COMPILE_EVENT_PREFIX = "/jax/core/compile/"
+_DUR_SUFFIX = "_duration"
+
+_installed = False
+
+
+def _on_duration(name: str, dur: float, **kw) -> None:
+    tr = _trace.get_tracer()
+    if not tr.enabled or not name.startswith(COMPILE_EVENT_PREFIX):
+        return
+    short = name[len(COMPILE_EVENT_PREFIX):]
+    if short.endswith(_DUR_SUFFIX):
+        short = short[:-len(_DUR_SUFFIX)]
+    tr.point_span(short, kind="compile", dur=float(dur))
+    tr.metrics.counter("profile.compiles", stage=short).inc()
+
+
+def install() -> bool:
+    """Register the compile listener once per process (idempotent).  Returns
+    False when jax (or its monitoring module) is unavailable."""
+    global _installed
+    if _installed:
+        return True
+    try:
+        from jax import monitoring
+        monitoring.register_event_duration_secs_listener(_on_duration)
+    except Exception:
+        return False
+    _installed = True
+    return True
+
+
+def shape_signature(*trees) -> str:
+    """Stable signature of the arrays a dispatch traces over: sorted leaf
+    ``dtype[shape]`` strings with multiplicities.  Two calls with the same
+    signature cannot retrace a jitted function; a changed signature explains
+    a ``compile`` span under the dispatch that carries it."""
+    import jax
+    import numpy as np
+    counts: dict[str, int] = {}
+    for tree in trees:
+        for leaf in jax.tree.leaves(tree):
+            if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+                k = (f"{np.dtype(leaf.dtype).name}"
+                     f"[{','.join(map(str, leaf.shape))}]")
+            else:
+                k = type(leaf).__name__
+            counts[k] = counts.get(k, 0) + 1
+    return ";".join(f"{k}x{n}" if n > 1 else k
+                    for k, n in sorted(counts.items()))
+
+
+def sample_memory(tracer) -> dict | None:
+    """One ``memory`` event with per-device bytes_in_use / peak watermarks
+    (plus gauges), or None when no device reports memory stats."""
+    if not tracer.enabled:
+        return None
+    try:
+        import jax
+        devices = jax.local_devices()
+    except Exception:
+        return None
+    devs = {}
+    for i, d in enumerate(devices):
+        try:
+            ms = d.memory_stats()
+        except Exception:
+            ms = None
+        if not ms:
+            continue
+        in_use = int(ms.get("bytes_in_use", 0))
+        peak = int(ms.get("peak_bytes_in_use", in_use))
+        devs[str(i)] = {"bytes_in_use": in_use, "peak_bytes_in_use": peak}
+        tracer.metrics.gauge("profile.bytes_in_use", device=str(i)).set(
+            in_use)
+        g = tracer.metrics.gauge("profile.peak_bytes_in_use", device=str(i))
+        g.set(max(peak, g.value))
+    if not devs:
+        return None
+    return tracer.event("memory", devices=devs)
+
+
+# ---------------------------------------------------------------------------
+# Offline reconstruction (stdlib-only)
+# ---------------------------------------------------------------------------
+
+def self_times(events: list[dict]) -> dict:
+    """Per-span device-time attribution from the trace alone.
+
+    Wall duration is attributed to the span that *spent* it: each span's
+    self-time is its duration minus the durations of its direct children,
+    so a ``dispatch`` span's self-time is the device execute + dispatch
+    overhead with nested ``compile`` spans carved out (compile time is
+    reported separately per row).  Compile-stage durations from
+    ``jax.monitoring`` can overlap (an outer jit's ``jaxpr_trace`` covers
+    inner jits' stages), so ``compile_s`` may exceed the parent's wall —
+    treat it as attribution, not a partition.  Grouped by
+    ``(kind, name)``::
+
+      {"kind/name": {"n", "total_s", "self_s", "compile_s"}}
+    """
+    spans = {e["id"]: e for e in events if e.get("type") == "span"}
+    child_s: dict = {}
+    compile_s: dict = {}
+    for e in spans.values():
+        p = e.get("parent")
+        if p is None or p not in spans:
+            continue
+        d = e.get("dur", 0.0) or 0.0
+        child_s[p] = child_s.get(p, 0.0) + d
+        if e.get("kind") == "compile":
+            compile_s[p] = compile_s.get(p, 0.0) + d
+    rows: dict = {}
+    for e in spans.values():
+        if e.get("kind") == "compile":
+            continue
+        key = f"{e.get('kind') or '?'}/{e.get('name') or '?'}"
+        r = rows.setdefault(key, {"n": 0, "total_s": 0.0, "self_s": 0.0,
+                                  "compile_s": 0.0})
+        d = e.get("dur", 0.0) or 0.0
+        r["n"] += 1
+        r["total_s"] += d
+        r["self_s"] += max(0.0, d - child_s.get(e["id"], 0.0))
+        r["compile_s"] += compile_s.get(e["id"], 0.0)
+    return rows
+
+
+def compile_stats(events: list[dict]) -> dict:
+    """Attribute every ``compile`` span to its enclosing region.
+
+    Returns::
+
+      {"n": total backend compiles, "total_s": all compile-stage seconds,
+       "by_stage": {stage: count}, "by_round": {rnd: backend compiles},
+       "by_signature": {sig: backend compiles}, "eval": ..., "setup": ...,
+       "after_first_round": backend compiles in rounds ≥ 1}
+
+    Counts are *backend* compiles (actual XLA compilations — jaxpr tracing
+    re-runs on cache misses too, but backend_compile is the expensive,
+    must-be-flat one); ``total_s`` sums every compile-stage duration.  A
+    compile span under an ``eval`` span is bucketed as eval (model
+    evaluation legitimately compiles once, whenever the first eval round
+    happens); one with no round ancestor is ``setup``.
+    """
+    spans = {e["id"]: e for e in events if e.get("type") == "span"}
+    out = {"n": 0, "total_s": 0.0, "by_stage": {}, "by_round": {},
+           "by_signature": {}, "eval": 0, "setup": 0,
+           "after_first_round": 0}
+    for e in spans.values():
+        if e.get("kind") != "compile":
+            continue
+        stage = e.get("name", "?")
+        out["by_stage"][stage] = out["by_stage"].get(stage, 0) + 1
+        out["total_s"] += e.get("dur", 0.0) or 0.0
+        if stage != "backend_compile":
+            continue
+        out["n"] += 1
+        rnd = sig = None
+        is_eval = False
+        p = e.get("parent")
+        while p is not None and p in spans:
+            ps = spans[p]
+            if ps.get("kind") == "eval":
+                is_eval = True
+            if sig is None and ps.get("kind") == "dispatch":
+                sig = (ps.get("attrs") or {}).get("sig")
+            if ps.get("kind") == "round":
+                rnd = (ps.get("attrs") or {}).get("rnd")
+                break
+            p = ps.get("parent")
+        if sig is not None:
+            out["by_signature"][sig] = out["by_signature"].get(sig, 0) + 1
+        if is_eval:
+            out["eval"] += 1
+        elif rnd is None:
+            out["setup"] += 1
+        else:
+            out["by_round"][rnd] = out["by_round"].get(rnd, 0) + 1
+            if isinstance(rnd, (int, float)) and rnd >= 1:
+                out["after_first_round"] += 1
+    return out

@@ -26,6 +26,7 @@ class RunRecorder(dict):
     def __init__(self, runner: str, fc=None, extra_keys=()):
         super().__init__()
         self._tr = _trace.get_tracer()
+        self._dead: set[str] = set()
         self["rounds"] = []
         self["acc"] = []
         self["comm_gb"] = 0.0
@@ -68,6 +69,44 @@ class RunRecorder(dict):
         span.end(down_bytes=int(down), up_bytes=int(up),
                  sim_time_s=self["sim_time_s"], comm_gb=self["comm_gb"],
                  loss=log.loss, acc=log.acc)
+        if self._tr.enabled:
+            # device-memory watermark at the round boundary (repro.obs
+            # .profile; silently nothing on backends without memory stats)
+            from repro.obs import profile as _profile
+            _profile.sample_memory(self._tr)
+
+    # ---- rank-allocation trajectory (FedARA §IV) ---------------------------
+
+    def record_ranks(self, rnd: int, masks_np, votes=None) -> None:
+        """One ``rank_alloc`` trace event per arbitration: per-module
+        live/total rank counts (plus optional per-module importance votes),
+        and a ``module_pruned`` event the first round a module's count hits
+        zero — the paper's rank trajectory / RankDet signal as first-class
+        trace data, so ``summarize``/``report`` rebuild it from JSONL alone.
+        No-op (zero work, no jax import) while tracing is disabled."""
+        if not self._tr.enabled or not masks_np:
+            return
+        from repro.core import pruning as _pruning
+        mods = _pruning.module_rank_summary(masks_np)
+        if votes:
+            for mod, frac in votes.items():
+                if mod in mods:
+                    mods[mod]["importance"] = float(frac)
+        live = sum(m["live"] for m in mods.values())
+        total = sum(m["total"] for m in mods.values())
+        self._tr.event("rank_alloc", rnd=int(rnd), live=live, total=total,
+                       n_dead=sum(1 for m in mods.values()
+                                  if m["live"] == 0),
+                       modules=mods)
+        for mod, m in sorted(mods.items()):
+            if m["live"] == 0 and mod not in self._dead:
+                self._dead.add(mod)
+                self._tr.event("module_pruned", rnd=int(rnd), module=mod)
+            elif m["live"]:
+                self._dead.discard(mod)
+        g = self._tr.metrics.gauge
+        g("ranks.live").set(live)
+        g("ranks.total").set(total)
 
     def inflight_comm(self, down: int, up: int) -> None:
         """Async: broadcasts/uploads in flight when the run ended were still

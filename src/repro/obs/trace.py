@@ -98,7 +98,7 @@ class Span:
             tr._stack.pop()
         elif self.sid in tr._stack:
             tr._stack.remove(self.sid)
-        tr._events.append({
+        tr._emit({
             "type": "span", "id": self.sid, "parent": self.parent,
             "name": self.name, "kind": self.kind,
             "t0": self._t0, "dur": tr._now() - self._t0,
@@ -128,9 +128,25 @@ class Tracer:
         self._stack: list[int] = []
         self._next_id = 0
         self._lazies: list[Lazy] = []
+        self._subs: list = []
 
     def _now(self) -> float:
         return time.perf_counter() - self._t_origin
+
+    # ---- live event stream -------------------------------------------------
+
+    def subscribe(self, fn) -> None:
+        """Register a live-stream consumer called with every span/event dict
+        the moment it lands in the buffer (spans arrive at *end*).  Consumers
+        may emit further events through the tracer (``obs.health`` emits
+        ``alert`` events this way); they must tolerate — and not re-process —
+        their own emissions."""
+        self._subs.append(fn)
+
+    def _emit(self, ev: dict) -> None:
+        self._events.append(ev)
+        for fn in self._subs:
+            fn(ev)
 
     def begin(self, name: str, kind: str = "span", **attrs) -> Span:
         sid = self._next_id
@@ -147,7 +163,26 @@ class Tracer:
         ev = {"type": "event", "name": name, "t": self._now(),
               "sim_t": self.sim_time if sim_t is None else sim_t,
               "attrs": attrs}
-        self._events.append(ev)
+        self._emit(ev)
+        return ev
+
+    def point_span(self, name: str, kind: str = "span", dur: float = 0.0,
+                   **attrs) -> dict:
+        """Record an already-finished region as a complete span, parented
+        under the innermost *open* span.  Used by ``obs.profile``'s
+        jax.monitoring listener: compile durations arrive post-hoc from jax,
+        so there is no begin()/end() window to straddle — but parenting under
+        the open round/dispatch span is exactly what attributes the compile
+        to the round that triggered it."""
+        sid = self._next_id
+        self._next_id += 1
+        now = self._now()
+        ev = {"type": "span", "id": sid,
+              "parent": self._stack[-1] if self._stack else None,
+              "name": name, "kind": kind,
+              "t0": max(now - dur, 0.0), "dur": dur,
+              "sim_t0": self.sim_time, "sim_dur": 0.0, "attrs": attrs}
+        self._emit(ev)
         return ev
 
     def resolve_pending(self) -> int:
@@ -229,6 +264,12 @@ class NullTracer:
     def event(self, name, sim_t=None, **attrs):
         return None
 
+    def point_span(self, name, kind="span", dur=0.0, **attrs):
+        return None
+
+    def subscribe(self, fn):
+        return None
+
     def resolve_pending(self):
         return 0
 
@@ -244,11 +285,26 @@ _TRACER: Tracer | NullTracer = NULL_TRACER
 
 
 def configure(path: str | None = None, enabled: bool = True,
-              meta: dict | None = None) -> Tracer | NullTracer:
+              meta: dict | None = None, health: bool = True,
+              profile: bool = True) -> Tracer | NullTracer:
     """Install the process tracer.  ``enabled=False`` (or ``disable()``)
-    restores the shared no-op tracer."""
+    restores the shared no-op tracer.
+
+    By default an enabled tracer also gets the *active* observability layer:
+    ``health=True`` subscribes the streaming health detectors (structured
+    ``alert`` events — see ``repro.obs.health``), ``profile=True`` installs
+    the jax.monitoring compile listener (``compile`` spans attributed to the
+    open round/dispatch span — see ``repro.obs.profile``).  Both are no-ops
+    until events flow, and profile degrades to nothing when jax is absent."""
     global _TRACER
     _TRACER = Tracer(path=path, meta=meta) if enabled else NULL_TRACER
+    if enabled:
+        if health:
+            from repro.obs import health as _health
+            _health.attach(_TRACER)
+        if profile:
+            from repro.obs import profile as _profile
+            _profile.install()
     return _TRACER
 
 

@@ -29,6 +29,7 @@ of shapes: (rank buckets) × (log2 n_slots) decode variants in total.
 
 from __future__ import annotations
 
+import time
 from collections import defaultdict, deque
 
 import jax
@@ -36,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs as OBS
+from repro.obs.metrics import Histogram
 from repro.pytree import is_meta, tree_bytes
 from repro.serving.registry import AdapterRegistry, RegistryFullError
 from repro.serving.scheduler import Request, Scheduler
@@ -117,6 +119,12 @@ class ServingEngine:
         self._deferred = 0
         self.decode_calls = 0
         self.prefill_calls = 0
+        # always-on latency histograms (host wall clock, bounded sample
+        # buffers — see obs.metrics.Histogram): stats() surfaces their
+        # p50/p95/p99, independent of whether tracing is configured
+        self._lat_step = Histogram("serve.step_s", ())
+        self._lat_request = Histogram("serve.request_s", ())
+        self._t_submit: dict[int, float] = {}
 
     # ---- tenant management -------------------------------------------------
 
@@ -131,13 +139,16 @@ class ServingEngine:
 
     def submit(self, adapter_id: str, prompt, max_new_tokens: int,
                eos_id: int | None = None) -> Request:
-        return self.scheduler.submit(adapter_id, prompt, max_new_tokens,
-                                     eos_id=eos_id)
+        req = self.scheduler.submit(adapter_id, prompt, max_new_tokens,
+                                    eos_id=eos_id)
+        self._t_submit[req.rid] = time.perf_counter()
+        return req
 
     # ---- the serving loop --------------------------------------------------
 
     def step(self) -> list[Request]:
         """One engine iteration; returns the requests finished this step."""
+        t_step = time.perf_counter()
         self.steps += 1
         self.scheduler.step_count = self.steps
         self._deferred = 0
@@ -153,6 +164,7 @@ class ServingEngine:
                 self.scheduler.reject(
                     req, f"unknown adapter {req.adapter_id!r}",
                     kind="unknown_adapter")
+                self._t_submit.pop(req.rid, None)
                 continue
             except RegistryFullError:
                 to_defer.append(req)                  # retry next step
@@ -171,13 +183,20 @@ class ServingEngine:
             self._decode_group(groups[bucket])
 
         done = []
+        now = time.perf_counter()
         for req in self.scheduler.running():
             if req.done:
                 self.scheduler.finish(req)
                 self.registry.release(req.adapter_id)
                 req.entry = None
                 done.append(req)
+                lat = now - self._t_submit.pop(req.rid, now)
+                self._lat_request.observe(lat)
+                OBS.get_metrics().histogram("serve.request_s").observe(lat)
         self.finished.extend(done)
+        step_s = time.perf_counter() - t_step
+        self._lat_step.observe(step_s)
+        OBS.get_metrics().histogram("serve.step_s").observe(step_s)
         ssp.end(running=self.scheduler.n_running,
                 waiting=self.scheduler.n_waiting, finished=len(done),
                 deferred=self._deferred)
@@ -275,6 +294,8 @@ class ServingEngine:
              "running": self.scheduler.n_running,
              "waiting": self.scheduler.n_waiting,
              "scheduler": self.scheduler.stats(),
-             "registry": self.registry.stats()}
+             "registry": self.registry.stats(),
+             "latency": {"step_s": self._lat_step.summary(),
+                         "request_s": self._lat_request.summary()}}
         s["cache"] = self.scheduler.slot_bytes(self.cache_slot_bytes)
         return s

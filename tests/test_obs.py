@@ -120,7 +120,10 @@ def test_lazy_attrs_resolve_in_one_batch(tmp_path):
         obs.close()
     finally:
         obs.disable()
-    (rnd,) = [e for e in E.read_jsonl(path) if e.get("type") == "span"]
+    # jax compile spans may land alongside (obs.profile's listener is
+    # installed by configure) — select the round span, don't assume one
+    (rnd,) = [e for e in E.read_jsonl(path)
+              if e.get("type") == "span" and e.get("kind") == "round"]
     assert rnd["attrs"]["loss"] == 0.25           # serialized resolved
 
 
@@ -148,6 +151,22 @@ def test_metrics_label_identity_and_aggregation():
     assert snap["resid"]["count"] == 5 and snap["resid"]["sum"] == 15.0
     assert snap["resid"]["min"] == 1.0 and snap["resid"]["max"] == 5.0
     assert snap["resid"]["p50"] == 3.0
+
+
+def test_histogram_quantiles():
+    m = Metrics()
+    h = m.histogram("lat")
+    for i in range(1, 102):                   # 1..101: exact rank quantiles
+        h.observe(float(i))
+    assert h.quantile(0.5) == 51.0
+    assert h.quantile(0.95) == 96.0
+    assert h.quantile(0.99) == 100.0
+    s = h.summary()
+    assert s["p50"] == 51.0 and s["p95"] == 96.0 and s["p99"] == 100.0
+    # snapshot mirrors the summary keys (satellite: tail latency surfaces
+    # through export.summarize and serving stats alike)
+    snap = m.snapshot()
+    assert snap["lat"]["p99"] == 100.0
 
 
 def test_metrics_kind_mismatch_raises():
@@ -428,6 +447,79 @@ def test_zero_round_run_guard(setup):
         h = run_federated(model, strat, parts, train, test, fc)
         assert h["rounds"] == [] and h["comm_gb"] == 0.0
         assert h["final_acc"] != h["final_acc"]        # NaN
+
+
+# ---------------------------------------------------------------------------
+# forensics: rank trajectory, compile flatness, no-alert golden
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fedara_trace(setup, tmp_path_factory):
+    """One traced 3-round fedara cohort run shared by the forensics tests."""
+    path = str(tmp_path_factory.mktemp("fedara") / "fedara.jsonl")
+    h = _traced_run(setup, path, runner="cohort", strategy="fedara",
+                    rounds=3)
+    return h, E.read_jsonl(path)
+
+
+def test_compile_flat_after_first_round(fedara_trace):
+    """ISSUE acceptance: compile-span accounting on a traced 3-round cohort
+    run shows zero new compilations after round 1.  Rounds are 0-indexed in
+    the trace, so 'after round 1' == no backend compile under a round span
+    with rnd >= 1 (the eval span buckets separately — evaluating at the end
+    legitimately compiles the eval step once)."""
+    from repro.obs import profile as P
+    h, events = fedara_trace
+    cs = P.compile_stats(events)
+    assert cs["after_first_round"] == 0, cs["by_round"]
+    assert all(rnd == 0 for rnd in cs["by_round"]), cs["by_round"]
+    # the accounting is live, not vacuous: this run's fresh jit closures
+    # compiled *somewhere*, and eval's compile is attributed to its own
+    # bucket rather than inflating a round
+    assert cs["n"] >= 1
+    assert cs["eval"] >= 1
+
+
+def test_rank_trajectory_reconstructs_history(fedara_trace):
+    """The per-round live-rank counts — the paper's allocation decision —
+    reconstruct from the JSONL alone and match the runner's history."""
+    h, events = fedara_trace
+    traj = E.rank_trajectory(events)
+    want = {log.rnd: log.live_ranks for log in h["rounds"]}
+    assert traj["live"] == want
+    assert traj["total"] == h["rounds"][0].live_ranks \
+        or traj["total"] >= max(want.values())
+    # every module appears with per-round live counts
+    assert traj["modules"]
+    for mod, per_round in traj["modules"].items():
+        assert set(per_round) <= set(traj["rounds"])
+    s = E.summarize(events)
+    assert s["ranks"]["rounds"] == len(h["rounds"])
+    assert s["ranks"]["final_live"] == h["rounds"][-1].live_ranks
+
+
+def test_clean_run_emits_no_alerts(fedara_trace):
+    """No-alert golden: a healthy short run must stay silent — both the
+    live monitor (embedded alert events) and the offline scan."""
+    from repro.obs import health as H
+    _, events = fedara_trace
+    assert H.embedded_alerts(events) == []
+    assert H.scan(events) == []
+    s = E.summarize(events)
+    assert s["alerts"] == {"n": 0, "by_type": {}}
+
+
+def test_memory_watermark_events_present(fedara_trace):
+    """Round boundaries sample device memory; on backends with no memory
+    stats (CPU) the sampler degrades to silence rather than erroring."""
+    _, events = fedara_trace
+    mems = [e for e in events if e.get("type") == "event"
+            and e.get("name") == "memory"]
+    import jax
+    if jax.devices()[0].memory_stats():
+        assert mems
+    else:
+        assert mems == []
 
 
 # ---------------------------------------------------------------------------

@@ -353,3 +353,9 @@ def test_engine_continuous_batching_reuses_slots(served):
     # 5 requests through 2 slots → at least three admission waves
     starts = sorted(r.start_step for r in reqs)
     assert starts[0] < starts[2] < starts[4]
+    # latency histograms (always on, tracer or not): every finished request
+    # and every step observed, with tail quantiles in the summary
+    lat = eng.stats()["latency"]
+    assert lat["request_s"]["count"] == 5
+    assert lat["step_s"]["count"] >= 3
+    assert lat["request_s"]["p99"] >= lat["request_s"]["p50"] > 0.0
