@@ -74,13 +74,31 @@ def main(argv=None):
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a repro.obs JSONL trace (spans + metrics) "
                          "here; inspect with `python -m repro.obs summarize`")
+    ap.add_argument("--trace-sample-clients", type=float, default=None,
+                    metavar="RATE",
+                    help="head-sample per-client spans at this rate "
+                         "(deterministic by (seed, round, client); clients "
+                         "with health alerts always kept; cohort rollup "
+                         "sketches preserve the dropped distributions)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve live telemetry on this port: /metrics "
+                         "(Prometheus text), /healthz, /snapshot (tail with "
+                         "`python -m repro.obs top URL`); implies tracing "
+                         "(in-memory only unless --trace)")
     args = ap.parse_args(argv)
 
-    if args.trace:
+    live = None
+    if args.trace or args.metrics_port is not None:
         obs.configure(args.trace, meta=obs.provenance(
             {"cmd": "fed_train", "strategy": args.strategy,
              "runner": args.runner, "codec": args.codec,
-             "secagg": args.secagg}))
+             "secagg": args.secagg}),
+            client_sample=args.trace_sample_clients,
+            sample_seed=args.seed)
+        if args.metrics_port is not None:
+            live = obs.serve_live(port=args.metrics_port)
+            print(f"live telemetry at {live.url}/metrics "
+                  f"(/healthz, /snapshot)", flush=True)
 
     cfg = MINI.with_(n_classes=args.n_classes, adapter_rank=args.rank)
     train = make_classification(1500, args.n_classes, cfg.vocab_size, 32,
@@ -141,10 +159,13 @@ def main(argv=None):
         s1 = h["stage1"]
         print(f"stage1: {s1['rounds']} rounds  up {s1['up_bytes'] / 1e6:.2f}"
               f" MB  clipped {s1['n_clipped']}")
-    if args.trace:
+    if args.trace or args.metrics_port is not None:
         obs.close()
-        print(f"trace written to {args.trace}  "
-              f"(python -m repro.obs summarize {args.trace})")
+        if live is not None:
+            live.stop()
+        if args.trace:
+            print(f"trace written to {args.trace}  "
+                  f"(python -m repro.obs summarize {args.trace})")
 
 
 if __name__ == "__main__":

@@ -147,6 +147,10 @@ def main(argv=None):
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a repro.obs JSONL trace (engine steps, "
                          "scheduler metrics, token counters) here")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve live telemetry on this port: /metrics "
+                         "(Prometheus text), /healthz, /snapshot; implies "
+                         "tracing (in-memory only unless --trace)")
     args = ap.parse_args(argv)
     if args.batch < 1:
         ap.error("--batch must be >= 1")
@@ -162,10 +166,15 @@ def main(argv=None):
         legacy_static_batch(cfg, args)
         return
 
-    if args.trace:
+    live = None
+    if args.trace or args.metrics_port is not None:
         obs.configure(args.trace, meta=obs.provenance(
             {"cmd": "serve", "arch": args.arch, "tenants": args.tenants,
              "slots": args.slots, "gen": args.gen}))
+        if args.metrics_port is not None:
+            live = obs.serve_live(port=args.metrics_port)
+            print(f"live telemetry at {live.url}/metrics "
+                  f"(/healthz, /snapshot)", flush=True)
 
     n_slots = args.slots or min(args.batch, 8)
     max_seq = args.prompt_len + args.gen
@@ -188,10 +197,13 @@ def main(argv=None):
           f"{engine.steps} engine steps, "
           f"{engine.decode_calls} decode calls")
     print("generated token ids (first request):", reqs[0].out)
-    if args.trace:
+    if args.trace or args.metrics_port is not None:
         obs.get_metrics().gauge("serve.tokens_per_s").set(n_tok / wall)
         obs.close()
-        print(f"trace written to {args.trace}")
+        if live is not None:
+            live.stop()
+        if args.trace:
+            print(f"trace written to {args.trace}")
 
 
 if __name__ == "__main__":

@@ -18,21 +18,32 @@ zero-cost surface.
     $ python -m repro.obs report trace.jsonl -o report.html
     $ python -m repro.obs regress fresh_BENCH.json BENCH_fedsim.json
 
-See trace.py (spans, wall+sim clocks, lazy device scalars), metrics.py
-(labeled counters/gauges/histograms), export.py (JSONL / Chrome trace /
-summarize / check / diff / rank_trajectory), record.py (RunRecorder: the
-runners' history dict as a view over the trace, rank_alloc events),
-health.py (streaming alert detectors), profile.py (compile accounting +
-memory watermarks), regress.py (bench regression sentinel), report.py
-(static HTML/terminal report).
+Live plane (``--metrics-port`` in the launch CLIs, or ``serve_live()``):
+
+    $ python -m repro.launch.fed_train --metrics-port 9100 ... &
+    $ curl -s localhost:9100/metrics       # Prometheus text exposition
+    $ python -m repro.obs top http://localhost:9100   # or: top trace.jsonl
+
+See trace.py (spans, wall+sim clocks, lazy device scalars, sampling
+hooks), metrics.py (labeled counters/gauges/histograms, label-cardinality
+cap), sketch.py (mergeable quantile sketches + seeded reservoirs),
+export.py (JSONL / Chrome trace / summarize / check / diff /
+rank_trajectory / rollup_summary), record.py (RunRecorder: the runners'
+history dict as a view over the trace, rank_alloc events, cohort-scale
+trace sampling), health.py (streaming alert detectors), profile.py
+(compile accounting + memory watermarks), live.py (/metrics /healthz
+/snapshot HTTP plane), top.py (ANSI live viewer), regress.py (bench
+regression sentinel), report.py (static HTML/terminal report).
 """
 
 from repro.obs.export import (chrome_trace, check, diff, provenance,
-                              rank_trajectory, read_jsonl, summarize,
-                              write_jsonl)
+                              rank_trajectory, read_jsonl, rollup_summary,
+                              summarize, write_jsonl)
 from repro.obs.health import HealthMonitor, Thresholds
 from repro.obs.health import scan as health_scan
+from repro.obs.live import LiveServer, serve_live
 from repro.obs.record import RunRecorder
+from repro.obs.sketch import Reservoir, Sketch
 from repro.obs.trace import (NULL_TRACER, Lazy, NullTracer, Span, Tracer,
                              annotate, close, configure, disable, get_tracer)
 
@@ -48,5 +59,6 @@ __all__ = [
     "annotate", "Tracer", "NullTracer", "NULL_TRACER", "Span", "Lazy",
     "RunRecorder", "read_jsonl", "write_jsonl", "chrome_trace",
     "summarize", "check", "diff", "provenance", "rank_trajectory",
-    "HealthMonitor", "Thresholds", "health_scan",
+    "rollup_summary", "HealthMonitor", "Thresholds", "health_scan",
+    "LiveServer", "serve_live", "Sketch", "Reservoir",
 ]

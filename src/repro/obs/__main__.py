@@ -1,5 +1,5 @@
 """Trace triage CLI:
-``python -m repro.obs summarize|diff|check|chrome|regress|report``.
+``python -m repro.obs summarize|diff|check|chrome|regress|report|top``.
 
   summarize trace.jsonl [--format human|json]
       Reconstruct run-level accounting (comm_gb / sim_time_s / secagg
@@ -23,6 +23,11 @@
       Static report (rank heatmap, bytes by codec × stage, alert
       timeline, compile counts); terminal rendering by default, one
       self-contained HTML file with -o.
+  top trace.jsonl | top http://host:port [--refresh S] [-n N] [--no-ansi]
+      Live ANSI view: round progress, loss-trend sparkline, bytes by
+      codec, p50/p95/p99 latency, active alerts.  Tails a JSONL trace or
+      a live ``/snapshot`` endpoint (``--metrics-port``); one line per
+      refresh when stdout is not a TTY.
 
 Stdlib-only, like the rest of ``repro.obs`` — runs before any jax install.
 """
@@ -113,6 +118,8 @@ def _cmd_regress(args) -> int:
                        speedup_tol=args.speedup_tol,
                        byte_tol=args.byte_tol,
                        metric_tol=args.metric_tol)
+    if args.quantile_tol is not None:
+        tol.quantile_tol = args.quantile_tol
     try:
         fresh, committed = R.load(args.fresh), R.load(args.committed)
     except (OSError, json.JSONDecodeError) as e:
@@ -136,6 +143,13 @@ def _cmd_report(args) -> int:
     else:
         print(REP.render_text(rep))
     return 0
+
+
+def _cmd_top(args) -> int:
+    from repro.obs import top as T
+    return T.run(args.source, refresh=args.refresh,
+                 iterations=args.iterations,
+                 ansi=False if args.no_ansi else None)
 
 
 def main(argv=None) -> int:
@@ -181,6 +195,9 @@ def main(argv=None) -> int:
                    help="two-sided relative byte drift (default 1e-6)")
     p.add_argument("--metric-tol", type=float, default=0.15,
                    help="two-sided relative loss/acc drift (default .15)")
+    p.add_argument("--quantile-tol", type=float, default=None,
+                   help="two-sided drift for sketch-backed pNN keys "
+                        "(default: 2x the sketch relative-error bound)")
     p.add_argument("--format", choices=["human", "json"], default="human")
     p.set_defaults(fn=_cmd_regress)
 
@@ -189,6 +206,17 @@ def main(argv=None) -> int:
     p.add_argument("-o", "--out", default=None,
                    help="write self-contained HTML here (default: terminal)")
     p.set_defaults(fn=_cmd_report)
+
+    p = sub.add_parser("top", help="live ANSI telemetry view")
+    p.add_argument("source",
+                   help="JSONL trace path or live base URL / /snapshot URL")
+    p.add_argument("--refresh", type=float, default=2.0,
+                   help="seconds between refreshes (default 2)")
+    p.add_argument("-n", "--iterations", type=int, default=None,
+                   help="stop after N refreshes (default: until Ctrl-C)")
+    p.add_argument("--no-ansi", action="store_true",
+                   help="force one-line-per-refresh mode even on a TTY")
+    p.set_defaults(fn=_cmd_top)
 
     args = ap.parse_args(argv)
     return args.fn(args)

@@ -152,6 +152,15 @@ def summarize(events: list[dict]) -> dict:
                         "total": traj["total"],
                         "n_pruned": len(traj["pruned"])}
 
+    # cohort rollups (trace sampling): merge each round's sketches into
+    # run-level distributions — the per-client → per-cohort → per-run
+    # composition the sketch's merge contract guarantees stays within the
+    # relative-error bound.  Counters above remain exact (round spans are
+    # never pruned); only these distributions are sketched.
+    rollup = rollup_summary(events)
+    if rollup:
+        out["rollup"] = rollup
+
     metrics = {}
     for e in events:
         if e.get("type") == "metric":
@@ -160,6 +169,38 @@ def summarize(events: list[dict]) -> dict:
             metrics[key] = e["value"]
     if metrics:
         out["metrics"] = metrics
+    return out
+
+
+def rollup_summary(events: list[dict]) -> dict:
+    """Merge every ``cohort_rollup`` span's sketches into run-level
+    per-metric distributions.  Returns ``{}`` when the trace was unsampled
+    (no rollup spans)::
+
+      {"rounds": n, "n_clients": Σ, "n_kept": Σ, "rate": last seen,
+       "dists": {key: {"count", "sum", "min", "max", "p50", ...}}}
+    """
+    from repro.obs.sketch import Sketch
+    merged: dict[str, Sketch] = {}
+    out = {"rounds": 0, "n_clients": 0, "n_kept": 0, "rate": None}
+    for e in events:
+        if e.get("type") != "span" or e.get("kind") != "rollup":
+            continue
+        a = e.get("attrs") or {}
+        out["rounds"] += 1
+        out["n_clients"] += a.get("n_clients", 0)
+        out["n_kept"] += a.get("n_kept", 0)
+        if a.get("rate") is not None:
+            out["rate"] = a["rate"]
+        for k, d in (a.get("sketches") or {}).items():
+            sk = Sketch.from_dict(d)
+            if k in merged:
+                merged[k].merge(sk)
+            else:
+                merged[k] = sk
+    if not out["rounds"]:
+        return {}
+    out["dists"] = {k: sk.summary() for k, sk in sorted(merged.items())}
     return out
 
 
@@ -281,6 +322,21 @@ def check(events: list[dict], require_kinds: list[str] | None = None,
                             f"round span {i}: bad {k} {v!r} (want int ≥ 0)")
                 if not isinstance(a.get("sim_time_s"), (int, float)):
                     problems.append(f"round span {i}: missing sim_time_s")
+            elif e["kind"] == "rollup":
+                a = e.get("attrs") or {}
+                for k in ("n_clients", "n_kept"):
+                    if not isinstance(a.get(k), int) or a[k] < 0:
+                        problems.append(
+                            f"rollup span {i}: bad {k} {a.get(k)!r}")
+                sks = a.get("sketches")
+                if not isinstance(sks, dict):
+                    problems.append(f"rollup span {i}: sketches not a dict")
+                else:
+                    for k, d in sks.items():
+                        if not isinstance(d, dict) \
+                                or not isinstance(d.get("count"), int):
+                            problems.append(
+                                f"rollup span {i}: malformed sketch {k!r}")
         elif t == "event":
             if "name" not in e or "t" not in e:
                 problems.append(f"event {i}: missing name/t")

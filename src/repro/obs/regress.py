@@ -17,6 +17,11 @@ and applies a noise-aware tolerance per class:
            deterministic, so any drift is a real codec/pipeline change.
   metric   loss/accuracy, two-sided ``--metric-tol`` (default 15%): seeds
            are fixed, but cross-platform float folds wobble.
+  quantile sketch-backed percentile keys (``p50``/``p95``/``p99`` leaves —
+           see ``repro.obs.sketch``): two-sided at twice the sketch's
+           documented relative-error bound (default 2 %), NOT the loose
+           metric class — two correct sketches of the same stream can
+           differ by at most one bucket width on each side.
   info     everything else (event counts, sample counts, sim times whose
            scale depends on the bench's round count) — reported, never
            fatal.  Likewise keys present in only one file: quick-mode
@@ -36,8 +41,12 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import re
+
+from repro.obs.sketch import DEFAULT_REL_ERR
 
 _INFO_SECTIONS = ("async", "provenance")
+_QUANTILE_LEAF = re.compile(r"^p\d{1,2}$")
 
 
 @dataclasses.dataclass
@@ -46,6 +55,8 @@ class Tolerances:
     speedup_tol: float = 0.5    # fresh_speed >= committed * (1 - tol)
     byte_tol: float = 1e-6      # |rel drift| <= tol
     metric_tol: float = 0.15    # |rel drift| <= tol
+    # two sketches of the same stream differ by ≤ rel_err on each side
+    quantile_tol: float = 2 * DEFAULT_REL_ERR
 
 
 def _median(vals):
@@ -62,6 +73,8 @@ def classify(key: str) -> str:
         return "info"
     if leaf.endswith("_samples") or leaf in ("noisy", "ndev", "events"):
         return "info"
+    if _QUANTILE_LEAF.match(leaf):
+        return "quantile"
     if "speedup" in leaf:
         return "speedup"
     if leaf.endswith("_s") or "time" in leaf or "latency" in leaf:
@@ -153,7 +166,8 @@ def compare(fresh: dict, committed: dict,
             rec["limit"] = c * (1.0 - tol.speedup_tol)
             bad = f < rec["limit"]
         else:
-            t = tol.byte_tol if kind == "bytes" else tol.metric_tol
+            t = {"bytes": tol.byte_tol,
+                 "quantile": tol.quantile_tol}.get(kind, tol.metric_tol)
             denom = max(abs(c), 1e-12)
             rec["limit"] = t
             rec["rel"] = abs(f - c) / denom

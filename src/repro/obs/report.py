@@ -7,6 +7,8 @@
     (cell shade = live/total rank fraction; ``×`` marks the round a module
     was pruned) — reconstructed from the recorder's ``rank_alloc`` events
   * bytes by codec × pipeline stage, from the pipeline's labeled counters
+  * the latency table (histogram metric rows: count + p50/p95/p99) —
+    sketch-backed quantiles render through the same columns as exact ones
   * the alert timeline (embedded ``alert`` events, or a fresh offline
     ``health.scan`` when the trace predates live monitoring)
   * compile accounting (``repro.obs.profile``): per-stage counts, compiles
@@ -63,12 +65,31 @@ def build_report(events: list[dict]) -> dict:
         rec["up" if e["name"].endswith("up_bytes") else "down"] += \
             e.get("value") or 0
 
+    # latency table: every histogram metric row renders through the same
+    # count/p50/p95/p99 columns whether its quantiles came from the live
+    # whole-stream sketch or a hand-built exact summary dict — the sketch's
+    # summary() shape IS the exact one's
+    latency = []
+    for e in events:
+        if e.get("type") != "metric" or e.get("metric") != "histogram":
+            continue
+        v = e.get("value") or {}
+        if not isinstance(v, dict):
+            continue
+        lb = e.get("labels") or {}
+        key = e["name"] if not lb else \
+            f"{e['name']}{{{','.join(f'{k}={x}' for k, x in sorted(lb.items()))}}}"
+        latency.append({"key": key, "count": v.get("count", 0),
+                        "p50": v.get("p50"), "p95": v.get("p95"),
+                        "p99": v.get("p99")})
+
     return {"meta": meta.get("meta") or {},
             "summary": summary,
             "trajectory": traj,
             "rank_totals": totals,
             "bytes_by": [{"codec": c, "stage": s, **rec}
                          for (c, s), rec in sorted(bytes_by.items())],
+            "latency": latency,
             "alerts": alerts,
             "compiles": P.compile_stats(events),
             "self_times": P.self_times(events)}
@@ -118,6 +139,16 @@ def render_text(rep: dict) -> str:
         for r in rep["bytes_by"]:
             L.append(f"  {r['codec']:>10} {r['stage']:>8}  "
                      f"up={int(r['up'])}  down={int(r['down'])}")
+
+    if rep.get("latency"):
+        L.append("== latency (histogram quantiles) ==")
+        width = max(len(r["key"]) for r in rep["latency"])
+        for r in rep["latency"]:
+            qs = "  ".join(
+                f"{tag}={r[tag] * 1e3:.2f}ms" if isinstance(
+                    r.get(tag), (int, float)) else f"{tag}=-"
+                for tag in ("p50", "p95", "p99"))
+            L.append(f"  {r['key'].ljust(width)}  n={r['count']:<6d} {qs}")
 
     L.append(f"== alerts ({len(rep['alerts'])}) ==")
     for a in rep["alerts"]:
@@ -214,6 +245,20 @@ def render_html(rep: dict) -> str:
                        f"<td>{_esc(r['stage'])}</td>"
                        f"<td>{int(r['up'])}</td>"
                        f"<td>{int(r['down'])}</td></tr>")
+        out.append("</table>")
+
+    if rep.get("latency"):
+        out.append("<h3>Latency (histogram quantiles)</h3><table border='1' "
+                   "style='border-collapse:collapse;'>"
+                   "<tr><th>metric</th><th>n</th><th>p50</th><th>p95</th>"
+                   "<th>p99</th></tr>")
+        for r in rep["latency"]:
+            cells = "".join(
+                f"<td>{r[tag] * 1e3:.2f}ms</td>" if isinstance(
+                    r.get(tag), (int, float)) else "<td>-</td>"
+                for tag in ("p50", "p95", "p99"))
+            out.append(f"<tr><td>{_esc(r['key'])}</td>"
+                       f"<td>{r['count']}</td>{cells}</tr>")
         out.append("</table>")
 
     out.append(f"<h3>Alerts ({len(rep['alerts'])})</h3>")

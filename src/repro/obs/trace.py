@@ -25,11 +25,27 @@ stamps ``sim_t0``/``sim_dur`` from it alongside the wall clock.
 from __future__ import annotations
 
 import json
+import random
 import time
 
 from repro.obs.metrics import Metrics, NULL_METRICS
 
 SCHEMA_VERSION = 1
+
+
+def client_keep(seed: int, rnd: int, cid: int, rate: float) -> bool:
+    """Deterministic head-sampling decision for one client's spans in one
+    round.  Keyed by ``(seed, round, client)`` so the same run config keeps
+    the same clients — traces diff cleanly across reruns — while distinct
+    rounds rotate through the cohort.  ``rate >= 1`` keeps everything;
+    ``rate <= 0`` keeps nothing (tail-keep on alert still applies; see
+    ``repro.obs.record``)."""
+    if rate >= 1.0:
+        return True
+    if rate <= 0.0:
+        return False
+    mixed = (int(seed) * 1000003 + int(rnd)) * 1000003 + int(cid)
+    return random.Random(mixed).random() < rate
 
 
 class Lazy:
@@ -117,10 +133,18 @@ class Tracer:
 
     enabled = True
 
-    def __init__(self, path: str | None = None, meta: dict | None = None):
+    def __init__(self, path: str | None = None, meta: dict | None = None,
+                 client_sample: float | None = None, sample_seed: int = 0):
         self.path = path
         self.sim_time = 0.0
         self.metrics = Metrics()
+        # cohort-scale sampling knobs (consumed by record.RunRecorder):
+        # None/1.0 = keep every client span; (0,1) = head-sample by
+        # client_keep(sample_seed, rnd, cid, rate) with tail-keep on alert.
+        self.client_sample = client_sample
+        self.sample_seed = sample_seed
+        # live telemetry plane (obs.live.LiveServer) when attached
+        self.live = None
         self._t_origin = time.perf_counter()
         self._events: list[dict] = [{
             "type": "meta", "schema": SCHEMA_VERSION,
@@ -147,6 +171,25 @@ class Tracer:
         self._events.append(ev)
         for fn in self._subs:
             fn(ev)
+
+    # ---- event-window editing (trace sampling) -----------------------------
+
+    def mark(self) -> int:
+        """Bookmark the current end of the event buffer.  Pair with
+        :meth:`window`/:meth:`replace_window` to prune a bounded region
+        (one round's client spans) off the hot path at a round boundary."""
+        return len(self._events)
+
+    def window(self, mark: int) -> list[dict]:
+        """Events emitted since ``mark`` (the pruning candidates)."""
+        return self._events[mark:]
+
+    def replace_window(self, mark: int, events: list[dict]) -> None:
+        """Replace everything after ``mark`` with ``events``.  Subscribers
+        are NOT re-notified: they already saw the originals at emission time
+        (the health monitor and live server deliberately observe the
+        *unsampled* stream; only the persisted buffer is thinned)."""
+        self._events[mark:] = events
 
     def begin(self, name: str, kind: str = "span", **attrs) -> Span:
         sid = self._next_id
@@ -255,6 +298,9 @@ class NullTracer:
     path = None
     sim_time = 0.0
     metrics = NULL_METRICS
+    client_sample = None
+    sample_seed = 0
+    live = None
 
     def begin(self, name, kind="span", **attrs):
         return NULL_SPAN
@@ -286,7 +332,8 @@ _TRACER: Tracer | NullTracer = NULL_TRACER
 
 def configure(path: str | None = None, enabled: bool = True,
               meta: dict | None = None, health: bool = True,
-              profile: bool = True) -> Tracer | NullTracer:
+              profile: bool = True, client_sample: float | None = None,
+              sample_seed: int = 0) -> Tracer | NullTracer:
     """Install the process tracer.  ``enabled=False`` (or ``disable()``)
     restores the shared no-op tracer.
 
@@ -295,9 +342,14 @@ def configure(path: str | None = None, enabled: bool = True,
     ``alert`` events — see ``repro.obs.health``), ``profile=True`` installs
     the jax.monitoring compile listener (``compile`` spans attributed to the
     open round/dispatch span — see ``repro.obs.profile``).  Both are no-ops
-    until events flow, and profile degrades to nothing when jax is absent."""
+    until events flow, and profile degrades to nothing when jax is absent.
+
+    ``client_sample`` in (0, 1) head-samples per-client spans at round
+    boundaries (deterministic by ``(sample_seed, round, client)``, tail-keep
+    on alert, cohort rollup sketches preserved — see ``repro.obs.record``)."""
     global _TRACER
-    _TRACER = Tracer(path=path, meta=meta) if enabled else NULL_TRACER
+    _TRACER = Tracer(path=path, meta=meta, client_sample=client_sample,
+                     sample_seed=sample_seed) if enabled else NULL_TRACER
     if enabled:
         if health:
             from repro.obs import health as _health

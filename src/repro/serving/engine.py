@@ -119,9 +119,9 @@ class ServingEngine:
         self._deferred = 0
         self.decode_calls = 0
         self.prefill_calls = 0
-        # always-on latency histograms (host wall clock, bounded sample
-        # buffers — see obs.metrics.Histogram): stats() surfaces their
-        # p50/p95/p99, independent of whether tracing is configured
+        # always-on latency histograms (host wall clock, whole-stream
+        # quantile sketches — see obs.metrics.Histogram): stats() surfaces
+        # their p50/p95/p99, independent of whether tracing is configured
         self._lat_step = Histogram("serve.step_s", ())
         self._lat_request = Histogram("serve.request_s", ())
         self._t_submit: dict[int, float] = {}
@@ -200,6 +200,15 @@ class ServingEngine:
         ssp.end(running=self.scheduler.n_running,
                 waiting=self.scheduler.n_waiting, finished=len(done),
                 deferred=self._deferred)
+        tr = OBS.get_tracer()
+        if tr.live is not None:
+            # live plane refresh at the step boundary, throttled — and free
+            # (one attribute check) when tracing is disabled
+            tr.live.publish(tr, progress={
+                "steps": self.steps, "running": self.scheduler.n_running,
+                "waiting": self.scheduler.n_waiting,
+                "finished": self.scheduler.n_finished},
+                min_interval=0.25)
         return done
 
     def run(self, max_steps: int | None = None) -> list[Request]:

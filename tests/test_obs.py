@@ -95,9 +95,23 @@ def test_disabled_tracer_is_shared_noop():
     assert tr.events() == [] and tr.close() == []
     assert tr.metrics is NULL_METRICS
     c = tr.metrics.counter("n", codec="int8")
-    assert c is tr.metrics.gauge("m") is tr.metrics.histogram("h")
+    assert c is tr.metrics.counter("other")      # shared per-kind singleton
     c.inc(5)
     assert c.value == 0 and tr.metrics.snapshot() == {}
+    # null instruments carry their kind's value/summary() SHAPE (satellite:
+    # disabled-tracing code paths must not branch differently on shape)
+    g = tr.metrics.gauge("m")
+    h = tr.metrics.histogram("h")
+    assert g is tr.metrics.gauge("m2") and h is tr.metrics.histogram("h2")
+    assert c.kind == "counter" and isinstance(c.value, int)
+    assert g.kind == "gauge" and isinstance(g.value, float)
+    g.set(3.3)
+    assert g.value == 0.0
+    h.observe(1.0)
+    assert h.kind == "histogram"
+    assert h.value == h.summary() == {"count": 0, "sum": 0.0,
+                                      "min": None, "max": None}
+    assert h.quantile(0.5) is None and h.count == 0
     # annotate is a shared no-op context when disabled
     ctx = obs.annotate("cohort_dispatch")
     with ctx:
@@ -150,23 +164,30 @@ def test_metrics_label_identity_and_aggregation():
     assert snap["eps"] == 1.25
     assert snap["resid"]["count"] == 5 and snap["resid"]["sum"] == 15.0
     assert snap["resid"]["min"] == 1.0 and snap["resid"]["max"] == 5.0
-    assert snap["resid"]["p50"] == 3.0
+    # sketch-backed quantile: exact to the documented relative-error bound
+    assert snap["resid"]["p50"] == pytest.approx(3.0, rel=0.01)
 
 
 def test_histogram_quantiles():
     m = Metrics()
     h = m.histogram("lat")
-    for i in range(1, 102):                   # 1..101: exact rank quantiles
+    for i in range(1, 102):                   # 1..101: known rank quantiles
         h.observe(float(i))
-    assert h.quantile(0.5) == 51.0
-    assert h.quantile(0.95) == 96.0
-    assert h.quantile(0.99) == 100.0
+    # whole-stream sketch quantiles: within the documented rel-error bound
+    assert h.quantile(0.5) == pytest.approx(51.0, rel=0.01)
+    assert h.quantile(0.95) == pytest.approx(96.0, rel=0.01)
+    assert h.quantile(0.99) == pytest.approx(100.0, rel=0.01)
     s = h.summary()
-    assert s["p50"] == 51.0 and s["p95"] == 96.0 and s["p99"] == 100.0
+    assert s["p50"] == pytest.approx(51.0, rel=0.01)
+    assert s["p95"] == pytest.approx(96.0, rel=0.01)
+    assert s["p99"] == pytest.approx(100.0, rel=0.01)
+    # summary keys stay pinned across the sketch-backend swap
+    assert set(s) == {"count", "sum", "min", "max",
+                      "p50", "p90", "p95", "p99"}
     # snapshot mirrors the summary keys (satellite: tail latency surfaces
     # through export.summarize and serving stats alike)
     snap = m.snapshot()
-    assert snap["lat"]["p99"] == 100.0
+    assert snap["lat"]["p99"] == pytest.approx(100.0, rel=0.01)
 
 
 def test_metrics_kind_mismatch_raises():
@@ -182,8 +203,46 @@ def test_histogram_sample_buffer_is_bounded():
     for i in range(SAMPLE_CAP + 100):
         h.observe(float(i))
     assert h.count == SAMPLE_CAP + 100    # exact count survives the cap
-    assert len(h._samples) == SAMPLE_CAP
+    # reservoir holds a bounded uniform sample of the WHOLE stream (Vitter's
+    # R, seeded): late observations can displace early ones — the old
+    # first-N buffer froze on warmup and could never contain the tail
+    assert len(h.reservoir.items) == SAMPLE_CAP
+    assert h.reservoir.n == SAMPLE_CAP + 100
+    assert any(v >= SAMPLE_CAP for v in h.reservoir.items)
     assert h.vmax == float(SAMPLE_CAP + 99)
+
+
+def test_histogram_quantiles_reflect_whole_stream_not_warmup():
+    # regression for the first-N bias: a stream whose distribution shifts
+    # after SAMPLE_CAP observations must move the quantiles
+    m = Metrics()
+    h = m.histogram("shift")
+    for _ in range(SAMPLE_CAP):
+        h.observe(1.0)
+    for _ in range(9 * SAMPLE_CAP):
+        h.observe(100.0)
+    # true p50 of the full stream is 100.0; the old buffer said 1.0
+    assert h.quantile(0.5) == pytest.approx(100.0, rel=0.01)
+
+
+def test_label_cardinality_cap():
+    from repro.obs.metrics import LABEL_CARD_CAP, OVERFLOW_LABEL
+    m = Metrics()
+    n = LABEL_CARD_CAP + 50
+    for i in range(n):
+        m.counter("per_client", client=str(i)).inc()
+    snap = m.snapshot()
+    series = [k for k in snap if k.startswith("per_client{")]
+    # bounded registry: CAP distinct values + one __overflow__ bucket
+    assert len(series) == LABEL_CARD_CAP + 1
+    assert f"per_client{{client={OVERFLOW_LABEL}}}" in snap
+    # aggregate stays exact: every increment landed somewhere
+    assert sum(snap[k] for k in series) == n
+    assert snap[f"per_client{{client={OVERFLOW_LABEL}}}"] == \
+        n - LABEL_CARD_CAP
+    # an already-tracked value keeps resolving to its own series
+    m.counter("per_client", client="3").inc()
+    assert m.snapshot()["per_client{client=3}"] == 2
 
 
 def test_metric_events_serialize_for_trace():
@@ -539,3 +598,137 @@ def test_scheduler_stats_and_bounded_retention():
     assert st["rejects"] == {"invalid": 5, "unknown_adapter": 1}
     assert st["admits"] == 1
     assert len(sch.rejected) == 3              # bounded triage window
+
+
+# ---------------------------------------------------------------------------
+# cohort-scale trace sampling (head-sample + tail-keep + rollups)
+# ---------------------------------------------------------------------------
+
+class _StubLog:
+    """RoundLog stand-in: just what end_round reads."""
+
+    def __init__(self, loss, acc):
+        self.loss, self.acc = loss, acc
+
+
+def _synthetic_round(rec, rnd, n_clients, alert_cid=None):
+    """One stubbed cohort round through the recorder: n_clients client
+    spans with deterministic losses/bytes, optionally one alert event
+    implicating ``alert_cid`` (tail-keep trigger)."""
+    rsp = rec.begin_round(rnd)
+    down = up = 0
+    for cid in range(n_clients):
+        csp = rec.begin_client(cid)
+        ub = 1000 + cid
+        up += ub
+        down += 2000
+        if cid == alert_cid:
+            obs.get_tracer().event("alert", alert="ef_blowup", cid=cid,
+                                   rnd=rnd)
+        csp.end(n_steps=4, up_bytes=ub, loss=1.0 + cid * 1e-3)
+    rec.add_sim(12.5)
+    rec.end_round(rsp, _StubLog(1.5, 0.5), down, up)
+    return down, up
+
+
+def _run_synthetic(tmp_path, name, n_clients, rounds, client_sample,
+                   alert_cid=None):
+    path = str(tmp_path / name)
+    try:
+        obs.configure(path, health=False, profile=False,
+                      client_sample=client_sample, sample_seed=0)
+        rec = obs.RunRecorder("cohort")
+        for rnd in range(rounds):
+            _synthetic_round(rec, rnd, n_clients, alert_cid=alert_cid)
+        rec.finish()
+        return rec, obs.close()
+    finally:
+        obs.disable()
+
+
+def test_sampled_1000_client_round_acceptance(tmp_path):
+    """The ISSUE's acceptance bar: a traced 1000-client synthetic round
+    emits ≤ 5% of the unsampled events, summarize/check reconstruct
+    comm_gb/sim_time_s exactly, and rollup sketch quantiles stay within
+    the documented relative-error bound of the exact per-client values."""
+    from repro.obs.sketch import DEFAULT_REL_ERR
+    n, rounds = 1000, 2
+    rec_full, ev_full = _run_synthetic(tmp_path, "full.jsonl", n, rounds,
+                                       client_sample=None)
+    rec_smp, ev_smp = _run_synthetic(tmp_path, "sampled.jsonl", n, rounds,
+                                     client_sample=0.02)
+    assert len(ev_smp) <= 0.05 * len(ev_full), (len(ev_smp), len(ev_full))
+
+    # exact counters survive sampling (round spans are never pruned)
+    s = E.summarize(ev_smp)
+    assert s["comm_gb"] == rec_smp["comm_gb"] == rec_full["comm_gb"]
+    assert s["sim_time_s"] == rec_smp["sim_time_s"]
+    assert s["down_bytes"] == E.summarize(ev_full)["down_bytes"]
+    assert E.check(ev_smp) == []
+
+    # rollup sketches: one per round, full population counted, quantiles
+    # within the rel-error bound of the exact nearest-rank values
+    ro = s["rollup"]
+    assert ro["rounds"] == rounds
+    assert ro["n_clients"] == n * rounds
+    assert 0 < ro["n_kept"] < n * rounds
+    losses = sorted([1.0 + cid * 1e-3 for cid in range(n)] * rounds)
+    for q, tag in ((0.5, "p50"), (0.95, "p95"), (0.99, "p99")):
+        exact = losses[int(round(q * (len(losses) - 1)))]
+        est = ro["dists"]["loss"][tag]
+        assert abs(est - exact) <= DEFAULT_REL_ERR * exact * (1 + 1e-6), \
+            (tag, est, exact)
+    assert ro["dists"]["loss"]["count"] == n * rounds
+
+
+def test_sampling_is_deterministic_and_head_sampled(tmp_path):
+    from repro.obs.trace import client_keep
+    _, ev_a = _run_synthetic(tmp_path, "a.jsonl", 300, 1, client_sample=0.1)
+    _, ev_b = _run_synthetic(tmp_path, "b.jsonl", 300, 1, client_sample=0.1)
+    kept = lambda evs: sorted(  # noqa: E731
+        e["attrs"]["cid"] for e in evs
+        if e.get("type") == "span" and e.get("kind") == "client")
+    assert kept(ev_a) == kept(ev_b)            # same seed → same clients
+    # and they are exactly the head-sample decision function's picks
+    expect = [c for c in range(300) if client_keep(0, 0, c, 0.1)]
+    assert kept(ev_a) == expect
+
+
+def test_tail_keep_on_alert(tmp_path):
+    """A client implicated in an alert keeps its spans even when the head
+    sample would have dropped it."""
+    from repro.obs.trace import client_keep
+    alert_cid = next(c for c in range(200)
+                     if not client_keep(0, 0, c, 0.05))
+    _, events = _run_synthetic(tmp_path, "alerted.jsonl", 200, 1,
+                               client_sample=0.05, alert_cid=alert_cid)
+    kept_cids = {e["attrs"]["cid"] for e in events
+                 if e.get("type") == "span" and e.get("kind") == "client"}
+    assert alert_cid in kept_cids
+    # the alert event itself is never pruned
+    assert any(e.get("type") == "event" and e.get("name") == "alert"
+               and (e.get("attrs") or {}).get("cid") == alert_cid
+               for e in events)
+    # rollup n_kept counts the tail-kept client too
+    (rollup,) = [e for e in events if e.get("type") == "span"
+                 and e.get("kind") == "rollup"]
+    assert rollup["attrs"]["n_kept"] == len(kept_cids)
+
+
+def test_unsampled_trace_has_no_rollups(tmp_path):
+    _, events = _run_synthetic(tmp_path, "uns.jsonl", 20, 1,
+                               client_sample=None)
+    assert not [e for e in events if e.get("kind") == "rollup"]
+    assert E.summarize(events).get("rollup") is None
+
+
+def test_check_flags_malformed_rollup():
+    events = _golden_events()
+    events.append({"type": "span", "id": 99, "parent": None,
+                   "name": "cohort_rollup", "kind": "rollup", "t0": 0.0,
+                   "dur": 0.0, "sim_t0": 0.0, "sim_dur": 0.0,
+                   "attrs": {"n_clients": 5, "n_kept": "two",
+                             "sketches": {"loss": {"pos": {}}}}})
+    problems = E.check(events)
+    assert any("bad n_kept" in p for p in problems)
+    assert any("malformed sketch" in p for p in problems)

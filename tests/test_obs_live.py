@@ -1,0 +1,369 @@
+"""Live telemetry plane: /metrics exposition validity, /healthz and
+/snapshot payloads, ``obs top`` in both file and URL modes, and the CI
+``obs-live`` smoke (a traced 2-round fed_train scraped mid-run, gated on
+``OBS_LIVE_SMOKE=1`` so the tier-1 suite stays jax-light).
+
+The exposition checker is a tiny stdlib parser written here — no
+prometheus client dep — validating the text format v0.0.4 subset we emit:
+``# TYPE`` lines, ``name{label="v",...} value`` samples, summary families
+with ``quantile`` labels plus ``_sum``/``_count``.
+"""
+
+import io
+import json
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro import obs  # noqa: E402
+from repro.obs import live as L  # noqa: E402
+from repro.obs import top as TOP  # noqa: E402
+
+_NAME = r"[a-zA-Z_:][a-zA-Z0-9_:]*"
+_SAMPLE = re.compile(
+    rf"^(?P<name>{_NAME})(?:\{{(?P<labels>[^}}]*)\}})? (?P<value>\S+)$")
+_TYPE = re.compile(rf"^# TYPE (?P<name>{_NAME}) "
+                   r"(?P<type>counter|gauge|summary|histogram|untyped)$")
+_LABEL = re.compile(rf'^{_NAME}="(?:[^"\\]|\\.)*"$')
+
+
+def parse_exposition(text: str) -> dict:
+    """Minimal v0.0.4 parser: returns ``{family: {"type": t, "samples":
+    [(name, labels_dict, value)]}}`` and raises AssertionError on any
+    malformed line — the in-test validity check the CI job relies on."""
+    families: dict = {}
+    current = None
+    for ln, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("#"):
+            m = _TYPE.match(line)
+            assert m, f"line {ln}: bad comment/TYPE line: {line!r}"
+            current = m.group("name")
+            assert current not in families, \
+                f"line {ln}: duplicate TYPE for {current}"
+            families[current] = {"type": m.group("type"), "samples": []}
+            continue
+        m = _SAMPLE.match(line)
+        assert m, f"line {ln}: bad sample line: {line!r}"
+        name = m.group("name")
+        fam = name
+        for suffix in ("_sum", "_count", "_bucket"):
+            if name.endswith(suffix) and name[:-len(suffix)] in families:
+                fam = name[:-len(suffix)]
+        assert fam in families, f"line {ln}: sample before TYPE: {line!r}"
+        labels = {}
+        if m.group("labels"):
+            for pair in re.split(r",(?=[a-zA-Z_])", m.group("labels")):
+                assert _LABEL.match(pair), \
+                    f"line {ln}: bad label pair {pair!r}"
+                k, v = pair.split("=", 1)
+                labels[k] = v[1:-1]
+        val = m.group("value")
+        assert val == "NaN" or float(val) == float(val) or True
+        families[fam]["samples"].append((name, labels, float(val)
+                                         if val != "NaN" else None))
+    return families
+
+
+# ---------------------------------------------------------------------------
+# exposition rendering
+# ---------------------------------------------------------------------------
+
+def _sample_metrics():
+    from repro.obs.metrics import Metrics
+    m = Metrics()
+    m.counter("pipeline.up_bytes", codec="signsgd", stage="stage2").inc(512)
+    m.counter("pipeline.up_bytes", codec="int8", stage="stage2").inc(256)
+    m.gauge("dp.epsilon").set(1.25)
+    h = m.histogram("serve.step_s")
+    for i in range(1, 101):
+        h.observe(i / 1000.0)
+    return m
+
+
+def test_exposition_is_valid_and_complete():
+    text = L.exposition(_sample_metrics())
+    fams = parse_exposition(text)
+    up = fams["pipeline_up_bytes"]
+    assert up["type"] == "counter"
+    assert {s[1].get("codec") for s in up["samples"]} == {"signsgd", "int8"}
+    assert sum(s[2] for s in up["samples"]) == 768
+    assert fams["dp_epsilon"]["type"] == "gauge"
+    assert fams["dp_epsilon"]["samples"][0][2] == 1.25
+    step = fams["serve_step_s"]
+    assert step["type"] == "summary"
+    quants = {s[1]["quantile"]: s[2] for s in step["samples"]
+              if "quantile" in s[1]}
+    assert set(quants) == {"0.5", "0.9", "0.95", "0.99"}
+    assert quants["0.5"] == pytest.approx(0.0505, rel=0.02)
+    count = [s for s in step["samples"] if s[0] == "serve_step_s_count"]
+    assert count and count[0][2] == 100
+    assert any(s[0] == "serve_step_s_sum" for s in step["samples"])
+
+
+def test_exposition_empty_registry():
+    from repro.obs.metrics import Metrics
+    assert parse_exposition(L.exposition(Metrics())) == {}
+
+
+def test_exposition_escapes_label_values():
+    from repro.obs.metrics import Metrics
+    m = Metrics()
+    m.counter("c", path='a"b\\c').inc()
+    fams = parse_exposition(L.exposition(m))
+    ((_, labels, v),) = fams["c"]["samples"]
+    assert v == 1
+
+
+# ---------------------------------------------------------------------------
+# LiveServer endpoints (in-process)
+# ---------------------------------------------------------------------------
+
+def _get(url, timeout=5):
+    try:
+        with urllib.request.urlopen(url, timeout=timeout) as r:
+            return r.status, r.headers.get("Content-Type", ""), r.read()
+    except urllib.error.HTTPError as e:
+        return e.code, e.headers.get("Content-Type", ""), e.read()
+
+
+def test_live_server_endpoints(tmp_path):
+    try:
+        tr = obs.configure(str(tmp_path / "t.jsonl"), profile=False)
+        live = obs.serve_live()           # port=0 → ephemeral
+        try:
+            tr.metrics.counter("rounds.total").inc(3)
+            tr.metrics.histogram("serve.step_s").observe(0.01)
+            live.publish(tr, progress={"round": 3, "rounds": 10,
+                                       "loss": 0.5})
+            code, ctype, body = _get(live.url + "/metrics")
+            assert code == 200
+            assert ctype == L.EXPOSITION_CONTENT_TYPE
+            fams = parse_exposition(body.decode())
+            assert fams["rounds_total"]["samples"][0][2] == 3
+            assert fams["serve_step_s"]["type"] == "summary"
+
+            code, ctype, body = _get(live.url + "/healthz")
+            hz = json.loads(body)
+            assert code == 200 and ctype == "application/json"
+            assert hz["ok"] is True and hz["alerts"] == []
+            assert hz["progress"]["round"] == 3
+            assert hz["uptime_s"] >= 0
+
+            code, _, body = _get(live.url + "/snapshot")
+            snap = json.loads(body)
+            assert code == 200
+            assert snap["progress"]["loss"] == 0.5
+            assert snap["metrics"]["rounds.total"] == 3
+
+            code, _, _ = _get(live.url + "/nope")
+            assert code == 404
+        finally:
+            live.stop()
+    finally:
+        obs.disable()
+
+
+def test_live_server_sees_alerts_and_round_trend(tmp_path):
+    try:
+        tr = obs.configure(str(tmp_path / "t.jsonl"), health=False,
+                           profile=False)
+        live = obs.serve_live()
+        try:
+            sp = tr.begin("round", kind="round", rnd=0)
+            sp.end(down_bytes=1, up_bytes=1, sim_time_s=0.0, loss=2.0)
+            tr.event("alert", alert="nan_loss", rnd=0)
+            live.publish(tr)
+            _, _, body = _get(live.url + "/healthz")
+            hz = json.loads(body)
+            assert hz["ok"] is False
+            assert hz["alerts"][0]["alert"] == "nan_loss"
+            _, _, body = _get(live.url + "/snapshot")
+            assert json.loads(body)["loss_trend"] == [[0, 2.0]]
+        finally:
+            live.stop()
+    finally:
+        obs.disable()
+
+
+def test_publish_throttle():
+    try:
+        tr = obs.configure(None, health=False, profile=False)
+        live = L.LiveServer()
+        try:
+            live.attach(tr)
+            assert live.publish(tr, min_interval=30.0) is True
+            assert live.publish(tr, min_interval=30.0) is False  # throttled
+            assert live.publish(tr) is True                      # unthrottled
+        finally:
+            live.stop()
+    finally:
+        obs.disable()
+
+
+def test_serve_live_requires_enabled_tracer():
+    obs.disable()
+    with pytest.raises(RuntimeError):
+        obs.serve_live()
+
+
+def test_null_tracer_has_no_live_cost_surface():
+    """RL2/zero-cost contract: the disabled path exposes live=None so the
+    instrumented boundary code is one attribute check, no publish."""
+    obs.disable()
+    tr = obs.get_tracer()
+    assert tr.live is None
+    assert tr.client_sample is None
+
+
+# ---------------------------------------------------------------------------
+# obs top
+# ---------------------------------------------------------------------------
+
+def _write_trace(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    try:
+        tr = obs.configure(path, health=False, profile=False)
+        run = tr.begin("run", kind="run", runner="cohort", rounds=2)
+        for rnd in range(2):
+            sp = tr.begin("round", kind="round", rnd=rnd)
+            sp.end(down_bytes=100, up_bytes=200, sim_time_s=float(rnd + 1),
+                   comm_gb=(rnd + 1) * 3e-7, loss=2.0 - rnd, acc=0.5)
+        tr.metrics.counter("pipeline.up_bytes", codec="signsgd",
+                           stage="stage2").inc(400)
+        tr.metrics.histogram("serve.step_s").observe(0.02)
+        run.end()
+        obs.close()
+    finally:
+        obs.disable()
+    return path
+
+
+def test_top_file_mode_renders(tmp_path):
+    path = _write_trace(tmp_path)
+    snap = TOP.fetch(path)
+    frame = TOP.render(snap)
+    assert "round 2/2" in frame
+    assert "loss trend" in frame
+    assert "signsgd" in frame
+    assert "serve.step_s" in frame and "p99" in frame
+    assert "alerts: none" in frame
+    line = TOP.render_line(snap)
+    assert "round=2/2" in line and "loss=1" in line
+
+    out = io.StringIO()                          # not a TTY → line mode
+    assert TOP.run(path, refresh=0.01, iterations=2, out=out) == 0
+    lines = [ln for ln in out.getvalue().splitlines() if ln]
+    assert len(lines) == 2 and all("round=2/2" in ln for ln in lines)
+
+    ansi = io.StringIO()                         # forced frame mode
+    assert TOP.run(path, refresh=0.01, iterations=1, ansi=True,
+                   out=ansi) == 0
+    assert ansi.getvalue().startswith("\x1b[H\x1b[J")
+
+
+def test_top_url_mode(tmp_path):
+    try:
+        tr = obs.configure(str(tmp_path / "t.jsonl"), health=False,
+                           profile=False)
+        live = obs.serve_live()
+        try:
+            tr.metrics.counter("rounds.total").inc()
+            live.publish(tr, progress={"round": 1, "rounds": 4,
+                                       "loss": 1.5})
+            snap = TOP.fetch(live.url)           # base URL → /snapshot
+            assert snap["progress"]["round"] == 1
+            out = io.StringIO()
+            assert TOP.run(live.url, refresh=0.01, iterations=1,
+                           out=out) == 0
+            assert "round=1/4" in out.getvalue()
+        finally:
+            live.stop()
+    finally:
+        obs.disable()
+
+
+def test_top_unreachable_source_exits_nonzero(tmp_path, capsys):
+    missing = str(tmp_path / "nope.jsonl")
+    assert TOP.run(missing, refresh=0.0, iterations=5,
+                   out=io.StringIO()) == 1
+
+
+def test_top_cli_subcommand(tmp_path, capsys):
+    from repro.obs.__main__ import main as obs_main
+    path = _write_trace(tmp_path)
+    assert obs_main(["top", path, "-n", "1", "--no-ansi"]) == 0
+    assert "round=2/2" in capsys.readouterr().out
+
+
+def test_sparkline():
+    assert TOP.sparkline([]) == ""
+    assert TOP.sparkline([1.0]) == TOP.SPARK[0]
+    s = TOP.sparkline([1, 2, 3, 4, 5, 6, 7, 8])
+    assert s[0] == TOP.SPARK[0] and s[-1] == TOP.SPARK[-1]
+
+
+# ---------------------------------------------------------------------------
+# CI obs-live smoke: traced fed_train with --metrics-port, scraped mid-run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(os.environ.get("OBS_LIVE_SMOKE") != "1",
+                    reason="set OBS_LIVE_SMOKE=1 (CI obs-live job)")
+def test_fed_train_metrics_port_smoke(tmp_path):
+    trace = str(tmp_path / "fed.jsonl")
+    port_file_env = dict(os.environ)
+    root = pathlib.Path(__file__).resolve().parents[1]
+    port_file_env["PYTHONPATH"] = str(root / "src")
+    port = 19173                                   # fixed test port
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.fed_train",
+         "--strategy", "fedlora", "--rounds", "2", "--clients", "4",
+         "--clients-per-round", "2", "--runner", "seq",
+         "--trace", trace, "--metrics-port", str(port)],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=port_file_env, cwd=str(root))
+    scraped = {}
+    try:
+        deadline = time.time() + 300
+        url = f"http://127.0.0.1:{port}"
+        while time.time() < deadline:
+            if proc.poll() is not None:
+                break
+            try:
+                _, ctype, body = _get(url + "/metrics", timeout=2)
+                fams = parse_exposition(body.decode())
+                if any(f.startswith("rounds") or "pipeline" in f
+                       for f in fams):
+                    scraped["metrics"] = fams
+                    scraped["ctype"] = ctype
+                    _, _, hz = _get(url + "/healthz", timeout=2)
+                    scraped["healthz"] = json.loads(hz)
+                    break
+            except OSError:
+                pass
+            time.sleep(0.5)
+        out, _ = proc.communicate(timeout=300)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    assert proc.returncode == 0, out[-3000:]      # clean shutdown
+    assert scraped, "never scraped a populated /metrics mid-run:\n" + \
+        out[-3000:]
+    assert scraped["ctype"] == L.EXPOSITION_CONTENT_TYPE
+    # nonzero round counters made it to the exposition mid-run
+    fams = scraped["metrics"]
+    nonzero = [s for fam in fams.values() for s in fam["samples"]
+               if s[2] and s[2] > 0]
+    assert nonzero
+    assert "progress" in scraped["healthz"]
+    assert "final acc" in out

@@ -1,0 +1,232 @@
+"""Property + example tests for ``repro.obs.sketch``: the merge contract
+(``merge(a, b)`` has the same state as a sketch of the concatenated
+stream, in any association order), the relative-error bound vs exact
+nearest-rank quantiles on adversarial streams, serialization round-trip
+through the JSONL trace, and the seeded reservoir's determinism.
+
+Property tests run through the ``tests/_hyp`` shim (skip cleanly when
+hypothesis is absent); the example-based tests always run.
+"""
+
+import json
+import pathlib
+import random
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from _hyp import given, settings, st  # noqa: E402
+from repro.obs.sketch import (DEFAULT_REL_ERR, Reservoir,  # noqa: E402
+                              Sketch)
+
+
+def _exact_quantile(vals, q):
+    s = sorted(vals)
+    return s[min(len(s) - 1, int(round(q * (len(s) - 1))))]
+
+
+def _bound(exact):
+    # rel_err · |exact|, padded for float rounding at bucket edges
+    return DEFAULT_REL_ERR * abs(exact) * (1 + 1e-6) + 1e-12
+
+
+def _fill(vals):
+    sk = Sketch()
+    for v in vals:
+        sk.add(v)
+    return sk
+
+
+# ---------------------------------------------------------------------------
+# merge contract
+# ---------------------------------------------------------------------------
+
+_FINITE = st.floats(allow_nan=False, allow_infinity=False,
+                    min_value=-1e12, max_value=1e12)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(_FINITE, max_size=200), st.lists(_FINITE, max_size=200))
+def test_merge_equals_concatenated_stream(xs, ys):
+    merged = _fill(xs).merge(_fill(ys))
+    assert merged.state() == _fill(xs + ys).state()
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(_FINITE, max_size=100), st.lists(_FINITE, max_size=100),
+       st.lists(_FINITE, max_size=100))
+def test_merge_associativity(xs, ys, zs):
+    left = _fill(xs).merge(_fill(ys)).merge(_fill(zs))
+    right = _fill(xs).merge(_fill(ys).merge(_fill(zs)))
+    assert left.state() == right.state()
+    assert left.state() == _fill(xs + ys + zs).state()
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.lists(st.floats(min_value=1e-9, max_value=1e9), min_size=1,
+                max_size=300),
+       st.sampled_from([0.5, 0.9, 0.95, 0.99]))
+def test_relative_error_bound_positive_streams(vals, q):
+    exact = _exact_quantile(vals, q)
+    est = _fill(vals).quantile(q)
+    assert abs(est - exact) <= _bound(exact), (q, est, exact)
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.lists(_FINITE, min_size=1, max_size=300),
+       st.sampled_from([0.0, 0.5, 0.99, 1.0]))
+def test_relative_error_bound_mixed_sign_streams(vals, q):
+    exact = _exact_quantile(vals, q)
+    est = _fill(vals).quantile(q)
+    assert abs(est - exact) <= _bound(exact), (q, est, exact)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(_FINITE, max_size=200))
+def test_serialization_roundtrip_property(vals):
+    sk = _fill(vals)
+    back = Sketch.from_dict(json.loads(json.dumps(sk.to_dict())))
+    assert back.state() == sk.state()
+    for q in (0.1, 0.5, 0.9):
+        assert back.quantile(q) == sk.quantile(q)
+
+
+# ---------------------------------------------------------------------------
+# example-based (always run)
+# ---------------------------------------------------------------------------
+
+def test_adversarial_streams_examples():
+    """Hand-picked nasties: huge dynamic range, heavy ties, zeros, the
+    sorted/reversed worst cases for naive samplers."""
+    streams = [
+        [10.0 ** e for e in range(-9, 10)],              # 18 decades
+        [1.0] * 999 + [1e9],                             # extreme tie mass
+        [0.0] * 10 + [1e-12, 1e12],                      # zeros + extremes
+        list(range(1, 1001)),                            # sorted
+        list(range(1000, 0, -1)),                        # reverse sorted
+        [-(1.5 ** k) for k in range(40)],                # negative geometric
+        [((-1) ** i) * (i + 1) for i in range(500)],     # alternating sign
+    ]
+    for vals in streams:
+        sk = _fill(vals)
+        assert sk.count == len(vals)
+        assert sk.vmin == min(vals) and sk.vmax == max(vals)
+        for q in (0.01, 0.25, 0.5, 0.75, 0.95, 0.99):
+            exact = _exact_quantile(vals, q)
+            est = sk.quantile(q)
+            assert abs(est - exact) <= _bound(exact), (vals[:3], q)
+
+
+def test_merge_contract_example_and_add_weighted():
+    rng = random.Random(7)
+    a = [rng.lognormvariate(0, 3) for _ in range(2000)]
+    b = [-rng.expovariate(1.0) for _ in range(500)] + [0.0] * 3
+    assert _fill(a).merge(_fill(b)).state() == _fill(a + b).state()
+    # weighted add is equivalent to repetition
+    w = Sketch()
+    w.add(2.5, n=10)
+    r = _fill([2.5] * 10)
+    assert w.state() == r.state()
+
+
+def test_empty_and_single_value_sketches():
+    sk = Sketch()
+    assert sk.quantile(0.5) is None
+    assert sk.summary() == {"count": 0, "sum": 0.0, "min": None,
+                            "max": None}
+    assert Sketch.from_dict(sk.to_dict()).state() == sk.state()
+    one = _fill([42.0])
+    assert one.quantile(0.0) == pytest.approx(42.0, rel=DEFAULT_REL_ERR)
+    assert one.quantile(1.0) == pytest.approx(42.0, rel=DEFAULT_REL_ERR)
+
+
+def test_non_finite_values_are_ignored():
+    sk = _fill([1.0, float("nan"), float("inf"), float("-inf"), 3.0])
+    assert sk.count == 2
+    assert sk.vmax == 3.0
+
+
+def test_merge_rejects_mismatched_rel_err():
+    with pytest.raises(ValueError):
+        Sketch(rel_err=0.01).merge(Sketch(rel_err=0.05))
+
+
+def test_bucket_collapse_caps_memory():
+    sk = Sketch(max_buckets=32)
+    for e in range(-200, 200):                   # 400 decades → collapse
+        sk.add(10.0 ** e)
+    assert len(sk.pos) <= 32
+    assert sk.count == 400
+    # the top of the distribution keeps full precision (collapse folds the
+    # smallest-magnitude buckets)
+    exact = 10.0 ** 199
+    assert abs(sk.quantile(1.0) - exact) <= _bound(exact)
+
+
+def test_jsonl_roundtrip_through_trace_file(tmp_path):
+    """The serialization path the rollup spans actually use: dict → JSONL
+    line on disk → parsed back → identical sketch state."""
+    sk = _fill([random.Random(3).gauss(5, 2) for _ in range(1000)])
+    path = tmp_path / "sk.jsonl"
+    with open(path, "w") as f:
+        f.write(json.dumps({"type": "span", "kind": "rollup",
+                            "attrs": {"sketches": {"loss": sk.to_dict()}}})
+                + "\n")
+    with open(path) as f:
+        ev = json.loads(f.readline())
+    back = Sketch.from_dict(ev["attrs"]["sketches"]["loss"])
+    assert back.state() == sk.state()
+    assert back.quantile(0.95) == sk.quantile(0.95)
+
+
+# ---------------------------------------------------------------------------
+# reservoir
+# ---------------------------------------------------------------------------
+
+def test_reservoir_is_seeded_and_deterministic():
+    r1, r2 = Reservoir(16, seed=9), Reservoir(16, seed=9)
+    for v in range(1000):
+        r1.add(float(v))
+        r2.add(float(v))
+    assert r1.items == r2.items
+    assert r1.n == r2.n == 1000
+    assert len(r1.items) == 16
+    r3 = Reservoir(16, seed=10)
+    for v in range(1000):
+        r3.add(float(v))
+    assert r3.items != r1.items                  # seed actually matters
+
+
+def test_reservoir_samples_whole_stream():
+    """Vitter's R keeps a uniform sample: after a distribution shift past
+    the cap, late values must be present (the old first-N buffer never
+    contained them)."""
+    r = Reservoir(64, seed=0)
+    for _ in range(64):
+        r.add(1.0)
+    for _ in range(64 * 20):
+        r.add(100.0)
+    frac_late = sum(1 for v in r.items if v == 100.0) / len(r.items)
+    assert frac_late > 0.5                       # expected ≈ 20/21
+
+
+def test_reservoir_merge_weighted():
+    a = Reservoir(32, seed=1)
+    b = Reservoir(32, seed=2)
+    for _ in range(900):
+        a.add(1.0)
+    for _ in range(100):
+        b.add(2.0)
+    a.merge(b)
+    assert a.n == 1000
+    assert len(a.items) == 32
+    # both sources represented, majority from the heavier stream
+    assert sum(1 for v in a.items if v == 1.0) > len(a.items) / 2
+    # empty-source edges
+    e = Reservoir(8)
+    e.merge(Reservoir(8))
+    assert e.n == 0 and e.items == []
+    e.merge(a)                                   # adopt, within our own cap
+    assert e.n == a.n and len(e.items) == 8
