@@ -3,7 +3,9 @@
 jax.shard_map graduated from jax.experimental between the versions this
 repo targets, and the replication-check kwarg was renamed with it
 (check_rep → check_vma).  Import ``shard_map``/``SHARD_MAP_KWARGS`` from
-here instead of re-deriving the spelling locally.
+here instead of re-deriving the spelling locally.  The persistent
+compilation-cache knobs moved around similarly — use
+``enable_compilation_cache``.
 """
 
 from __future__ import annotations
@@ -15,3 +17,23 @@ if hasattr(jax, "shard_map"):
 else:
     from jax.experimental.shard_map import shard_map  # noqa: F401
     SHARD_MAP_KWARGS = {"check_rep": False}
+
+
+def enable_compilation_cache(path: str) -> bool:
+    """Point jax's persistent compilation cache at ``path`` so repeated
+    sweeps (separate processes included) skip lowering+compilation.
+
+    The default activation thresholds (minimum entry size / minimum compile
+    time) would silently skip the small, fast CPU compiles this repo's test
+    models produce, so both are forced off — every executable is cached.
+    Returns False (and changes nothing) when this jax has no persistent
+    cache support."""
+    try:
+        from jax.experimental.compilation_cache import (
+            compilation_cache as _cc)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+        _cc.set_cache_dir(path)
+    except Exception:
+        return False
+    return True

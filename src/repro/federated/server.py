@@ -68,6 +68,13 @@ class FedConfig:
     eval_batches: int = 16
     # ---- fedsim (device-parallel simulation / transport / async) ----------
     runner: str = "seq"                 # seq | cohort | async
+    fuse_rounds: int = 1                # cohort: scan K rounds per dispatch
+                                        # (1 ≡ eager; >1 needs the fast path,
+                                        # else falls back — fedsim/fused.py)
+    opt_state_dtype: str = "float32"    # adam moment storage:
+                                        # float32 | bfloat16 | int8
+    rebucket: bool = False              # cohort: per-round pow-2 step-axis
+                                        # re-bucketing (skewed partitions)
     codec: str = "identity"      # identity | int8 | topk | signsgd | powersgd
     powersgd_rank: int = 2              # q for the powersgd codec
     dropout: float = 0.0                # P(selected client never reports)
@@ -162,7 +169,8 @@ def _init_run(model, strategy, fc: FedConfig):
     masks_np = MK.jax_to_np(masks) if masks else None
     n_rank_units = MK.total_ranks(masks_np) if masks_np else 0
     total_steps = fc.rounds * fc.max_local_batches * fc.local_epochs
-    opt = OPT.adam(OPT.linear_decay(fc.lr, total_steps))
+    opt = OPT.adam(OPT.linear_decay(fc.lr, total_steps),
+                   state_dtype=fc.opt_state_dtype)
     rng = np.random.default_rng(fc.seed)
     return base, trainable, masks, masks_np, n_rank_units, opt, rng
 

@@ -52,11 +52,18 @@ class Cohort:
 
 
 def build_cohort(train: Dataset, parts: list[np.ndarray], sel, fc, rnd: int,
-                 pad_clients_to: int) -> Cohort | None:
+                 pad_clients_to: int, bucket: bool = False) -> Cohort | None:
     """Materialize selected clients' local batches into a padded rectangle
-    using the same RNG streams as the sequential oracle."""
+    using the same RNG streams as the sequential oracle.
+
+    ``bucket=True`` re-buckets the step axis per round: instead of padding
+    every client to the global ``max_local_batches × local_epochs`` ceiling,
+    the rectangle's T is the next power of two ≥ this cohort's real maximum
+    step count — dirichlet-skewed cohorts stop paying for steps nobody runs,
+    and the pow-2 snap bounds distinct compiled shapes to log2(T_max).
+    """
     T = fc.max_local_batches * fc.local_epochs
-    stacked, smask, weights, cids, fallback, nsteps = [], [], [], [], [], []
+    raw, weights, cids, fallback = [], [], [], []
     for cid in sel:
         idx = parts[cid]
         cd = Dataset(train.tokens[idx], train.labels[idx])
@@ -68,16 +75,21 @@ def build_cohort(train: Dataset, parts: list[np.ndarray], sel, fc, rnd: int,
                          for b in bl for v in b.values()):
             fallback.append(int(cid))
             continue
+        raw.append(bl)
+        weights.append(float(len(idx)))
+        cids.append(int(cid))
+    if not raw:
+        return None
+    if bucket:
+        T = min(T, 1 << (max(len(bl) for bl in raw) - 1).bit_length())
+    stacked, smask, nsteps = [], [], []
+    for bl in raw:
         m = np.zeros(T, bool)
         m[:len(bl)] = True
         bl = bl + [bl[0]] * (T - len(bl))
         stacked.append({k: np.stack([b[k] for b in bl]) for k in bl[0]})
         smask.append(m)
-        weights.append(float(len(idx)))
-        cids.append(int(cid))
         nsteps.append(int(m.sum()))
-    if not stacked:
-        return None
     C = max(pad_clients_to, len(stacked))
     while len(stacked) < C:                     # dead slots: weight 0, no steps
         stacked.append(stacked[0])
@@ -101,16 +113,16 @@ def stack_params(trainable: Any, n: int) -> Any:
         lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), trainable)
 
 
-def make_cohort_fn(model, opt, task: str = "cls", mesh=None):
-    """Build the one-dispatch cohort round.
+def make_local_phase(model, opt, task: str = "cls"):
+    """One client's whole local-training phase as a scan over (padded)
+    batches — the shared inner loop of ``make_cohort_fn`` (vmapped per
+    round) and ``fused.make_fused_fn`` (vmapped inside a scan over rounds).
 
-    Returns jitted ``fn(base, stacked, masks, gate, bstacks, smasks, weights)
-    → (params_c, grads_c, losses_c, metrics_c, avg)`` where the ``_c`` outputs
-    carry the cohort axis and ``avg`` is the weight-normalized on-device
-    FedAvg of the final per-client params (weight-0 pad slots drop out).
+    ``local_phase(base, params0, masks, gate, bstack, smask) → (params,
+    grads, losses, metrics)``; a False ``smask`` step computes and then
+    discards, so real steps are structurally identical to the oracle's.
     """
     loss_fn = model.cls_loss if task == "cls" else model.lm_loss
-    mesh = mesh if mesh is not None else cohort_mesh()
 
     def local_phase(base, params0, masks, gate, bstack, smask):
         opt0 = opt.init(params0)
@@ -142,6 +154,20 @@ def make_cohort_fn(model, opt, task: str = "cls", mesh=None):
         (params, _, grads), (losses, metrics) = jax.lax.scan(
             step, (params0, opt0, g0), (bstack, smask))
         return params, grads, losses, metrics
+
+    return local_phase
+
+
+def make_cohort_fn(model, opt, task: str = "cls", mesh=None):
+    """Build the one-dispatch cohort round.
+
+    Returns jitted ``fn(base, stacked, masks, gate, bstacks, smasks, weights)
+    → (params_c, grads_c, losses_c, metrics_c, avg)`` where the ``_c`` outputs
+    carry the cohort axis and ``avg`` is the weight-normalized on-device
+    FedAvg of the final per-client params (weight-0 pad slots drop out).
+    """
+    local_phase = make_local_phase(model, opt, task)
+    mesh = mesh if mesh is not None else cohort_mesh()
 
     def body(base, stacked, masks, gate, bstacks, smasks, weights):
         params_c, grads_c, losses_c, metrics_c = jax.vmap(

@@ -73,10 +73,12 @@ class EncodedUpdate:
 
 
 def delta_tree(params: Any, ref: Any) -> Any:
-    """Host-side f32 delta between two structurally-equal trees."""
+    """Host-side f32 delta between two structurally-equal trees.  One
+    batched device→host pull for both trees, not a pair per leaf."""
+    params, ref = jax.device_get((params, ref))
     return jax.tree.map(
-        lambda a, b: np.asarray(jax.device_get(a), np.float32)
-        - np.asarray(jax.device_get(b), np.float32), params, ref)
+        lambda a, b: np.asarray(a, np.float32) - np.asarray(b, np.float32),
+        params, ref)
 
 
 def apply_delta(global_tree: Any, delta: Any) -> Any:

@@ -75,6 +75,16 @@ def run(model, strategy, parts, train, test, fc,
 
 def run_cohort(model, strategy, parts, train, test, fc,
                on_round: Callable | None = None) -> dict:
+    if getattr(fc, "fuse_rounds", 1) > 1:
+        # fused fast path: one XLA program per K rounds (fedsim/fused.py);
+        # anything needing host work between rounds falls back to the eager
+        # loop below, with the reason on the trace
+        from repro.fedsim import fused as FU
+        ok, why = FU.eligible(fc, strategy, parts)
+        if ok:
+            return FU.run_fused(model, strategy, parts, train, test, fc,
+                                on_round)
+        OBS.get_tracer().event("fused_fallback", reason=why)
     base, trainable, masks, masks_np, n_rank_units, opt, rng = \
         SV._init_run(model, strategy, fc)
     step_fn = CL.make_train_step(model, opt, fc.task)     # ragged fallback
@@ -124,7 +134,8 @@ def run_cohort(model, strategy, parts, train, test, fc,
         active = [int(c) for c, d in zip(sel, drops) if not d]
 
         # ---- local phase: one dispatch for the whole cohort --------------
-        cohort = CH.build_cohort(train, parts, active, fc, rnd, c_pad)
+        cohort = CH.build_cohort(train, parts, active, fc, rnd, c_pad,
+                                 bucket=fc.rebucket)
         pc = gc = lc = mc = avg = None
         cohort_idx = {}
         if cohort is not None:
@@ -143,21 +154,20 @@ def run_cohort(model, strategy, parts, train, test, fc,
                     base, stacked, masks, gate, cohort.batches,
                     cohort.step_mask, cohort.weights)
             dsp.end()
-            lc, mc = np.asarray(lc, np.float32), np.asarray(mc, np.float32)
             cohort_idx = {cid: i for i, cid in enumerate(cohort.cids)}
-            # One batched device→host pull for the whole cohort; the
-            # per-client params/deltas below are host-side slices of these,
-            # not C separate per-leaf transfers inside the client loop.
-            pc_host = jax.tree.map(
-                lambda a: np.asarray(jax.device_get(a)), pc)
-            bc_host = jax.tree.map(
-                lambda a: np.asarray(jax.device_get(a)), bc)
+            # ONE batched device→host pull for everything the host path
+            # reads — cohort params, broadcast ref, (optional) grads, and
+            # the loss/metric stacks; the per-client params/deltas below
+            # are host-side slices of these, not per-leaf transfers inside
+            # the client loop.
+            pc_host, bc_host, gc_host, lc, mc = jax.device_get(
+                (pc, bc,
+                 gc if strategy.uses_masks() and gc is not None else None,
+                 lc, mc))
+            lc, mc = np.asarray(lc, np.float32), np.asarray(mc, np.float32)
             dc = jax.tree.map(
                 lambda p, b: np.asarray(p, np.float32)
                 - np.asarray(b, np.float32), pc_host, bc_host)
-            gc_host = jax.tree.map(
-                lambda a: np.asarray(jax.device_get(a)), gc) \
-                if strategy.uses_masks() and gc is not None else None
 
         results, local_masks, encoded = [], [], []
         up = 0

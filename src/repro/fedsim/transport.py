@@ -284,9 +284,11 @@ def flatten_update(trainable: Any, masks_np: Any | None) -> np.ndarray:
     """Trainable tree → f32 wire: CommPru-packed adapters ++ other leaves
     (classifier head, ...) in deterministic tree order."""
     ad = COMM.pack(trainable.get("adapters", {}), masks_np)
-    rest = [np.asarray(jax.device_get(x), np.float32).ravel()
-            for x in jax.tree.leaves(
-                {k: v for k, v in trainable.items() if k != "adapters"})]
+    # one batched device→host pull for the non-adapter leaves, not one per
+    # wire segment
+    rest = jax.device_get(jax.tree.leaves(
+        {k: v for k, v in trainable.items() if k != "adapters"}))
+    rest = [np.asarray(x, np.float32).ravel() for x in rest]
     return np.concatenate([ad] + rest) if rest else ad
 
 

@@ -1,4 +1,4 @@
 from repro.optim.optimizers import (  # noqa: F401
-    Optimizer, adam, adamw, sgd, apply_updates)
+    Optimizer, adam, adamw, sgd, apply_updates, state_nbytes)
 from repro.optim.schedules import (  # noqa: F401
     constant, linear_decay, cosine, wsd)

@@ -13,6 +13,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,35 +45,90 @@ def sgd(lr: float | Callable, momentum: float = 0.0) -> Optimizer:
     return Optimizer(init, update)
 
 
+# Quantized-moment storage: int8 moments travel as {"q", "scale"} dict
+# leaves (per-tensor absmax scaling), so tree maps over optimizer state need
+# is_leaf to stop at them.
+_QKEYS = frozenset({"q", "scale"})
+
+
+def _is_qleaf(x) -> bool:
+    return isinstance(x, dict) and set(x) == _QKEYS
+
+
+def _qmap(f, packed, *trees):
+    return jax.tree.map(f, packed, *trees, is_leaf=_is_qleaf)
+
+
+def _moment_codec(state_dtype: str):
+    """(store, load) for one moment tensor: f32 compute ↔ packed storage."""
+    if state_dtype == "float32":
+        return (lambda x: x), (lambda x: x)
+    if state_dtype == "bfloat16":
+        return (lambda x: x.astype(jnp.bfloat16)), \
+               (lambda x: x.astype(jnp.float32))
+    if state_dtype == "int8":
+        def store(x):
+            scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) / 127.0
+            q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+            return {"q": q, "scale": scale.astype(jnp.float32)}
+
+        def load(x):
+            return x["q"].astype(jnp.float32) * x["scale"]
+        return store, load
+    raise ValueError(f"unknown optimizer state_dtype {state_dtype!r} "
+                     "(float32|bfloat16|int8)")
+
+
+def state_nbytes(state) -> int:
+    """Exact bytes held by an optimizer state tree (quantized leaves count
+    their packed q + scale storage, not the f32 compute view)."""
+    return sum(int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(state))
+
+
 def adam(lr: float | Callable, b1: float = 0.9, b2: float = 0.999,
-         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+         eps: float = 1e-8, weight_decay: float = 0.0,
+         state_dtype: str = "float32") -> Optimizer:
+    """``state_dtype`` picks the moment *storage* (compute is always f32):
+    ``bfloat16`` halves both moment buffers; ``int8`` packs the momentum as
+    per-tensor absmax int8 but keeps the variance in bf16 — per-tensor int8
+    crushes small second-moment entries to zero, turning the ε-guarded
+    denominator into a divergence amplifier."""
     lr_fn = lr if callable(lr) else (lambda _: lr)
+    store_mu, load_mu = _moment_codec(state_dtype)
+    store_nu, load_nu = _moment_codec(
+        "bfloat16" if state_dtype == "int8" else state_dtype)
 
     def init(params):
         return {"step": jnp.zeros((), jnp.int32),
-                "mu": _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params),
-                "nu": _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+                "mu": _tmap(lambda p: store_mu(
+                    jnp.zeros(p.shape, jnp.float32)), params),
+                "nu": _tmap(lambda p: store_nu(
+                    jnp.zeros(p.shape, jnp.float32)), params)}
 
     def update(grads, state, params=None):
         step = state["step"] + 1
         lr_t = lr_fn(step)
-        mu = _tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
-                   state["mu"], grads)
-        nu = _tmap(lambda v, g: b2 * v + (1 - b2) * jnp.square(
-            g.astype(jnp.float32)), state["nu"], grads)
+        mu = _qmap(lambda m, g: store_mu(
+            b1 * load_mu(m) + (1 - b1) * g.astype(jnp.float32)),
+            state["mu"], grads)
+        nu = _qmap(lambda v, g: store_nu(
+            b2 * load_nu(v) + (1 - b2) * jnp.square(g.astype(jnp.float32))),
+            state["nu"], grads)
         c1 = 1 - b1 ** step.astype(jnp.float32)
         c2 = 1 - b2 ** step.astype(jnp.float32)
 
         def u(m, v, p):
+            m, v = load_mu(m), load_nu(v)
             upd = -lr_t * (m / c1) / (jnp.sqrt(v / c2) + eps)
             if weight_decay and p is not None:
                 upd = upd - lr_t * weight_decay * p.astype(jnp.float32)
             return upd.astype(p.dtype if p is not None else upd.dtype)
 
         if params is None:
-            upd = _tmap(lambda m, v: u(m, v, None), mu, nu)
+            upd = _qmap(lambda m, v: u(m, v, None), mu, nu)
         else:
-            upd = _tmap(u, mu, nu, params)
+            upd = _qmap(u, mu, nu, params)
         return upd, {"step": step, "mu": mu, "nu": nu}
 
     return Optimizer(init, update)

@@ -47,6 +47,34 @@ def test_wsd_schedule_phases():
     assert float(f(10)) < float(f(50)) <= 1.0
 
 
+def test_adam_quantized_state_converges_quadratic():
+    """bf16/int8 moment storage must still drive the quadratic to ~0 —
+    quantization noise changes the path, not whether adam works."""
+    for dtype, tol in (("bfloat16", 1e-2), ("int8", 5e-2)):
+        opt = OPT.adam(0.1, state_dtype=dtype)
+        params = {"x": jnp.asarray([5.0, -3.0])}
+        state = opt.init(params)
+        for _ in range(200):
+            g = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+            upd, state = opt.update(g, state, params)
+            params = OPT.apply_updates(params, upd)
+        assert float(jnp.abs(params["x"]).max()) < tol, dtype
+
+
+def test_adam_state_dtype_packs_bytes():
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}
+    n = 64 * 32 + 32
+    sizes = {d: OPT.state_nbytes(OPT.adam(0.1, state_dtype=d).init(params))
+             for d in ("float32", "bfloat16", "int8")}
+    assert sizes["float32"] == 4 + 2 * 4 * n       # step + f32 mu + f32 nu
+    assert sizes["bfloat16"] == 4 + 2 * 2 * n      # exactly halved moments
+    # int8: mu as int8 q + f32 scale per tensor, nu stays bf16
+    assert sizes["int8"] == 4 + (n + 2 * 4) + 2 * n
+    import pytest
+    with pytest.raises(ValueError):
+        OPT.adam(0.1, state_dtype="fp8")
+
+
 def test_adam_weight_decay():
     opt = OPT.adamw(0.1, weight_decay=0.5)
     params = {"x": jnp.asarray([1.0])}
